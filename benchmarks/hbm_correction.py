@@ -1,0 +1,139 @@
+"""Annotate dry-run records with a TPU-corrected HBM estimate.
+
+The CPU backend upcasts every bf16 dot operand to f32 (verified: a bf16
+matmul's compiled module contains `convert bf16->f32` fusions of the full
+weight, doubling temp bytes — see EXPERIMENTS.md §Dry-run). TPU executes
+bf16 natively, so `memory_analysis()` from this container OVERSTATES HBM:
+
+  corrected = raw - 2 * bf16_static_args          (f32 copies of weights/caches)
+            - bf16_resid_estimate (train only)    (f32 copies of saved carries)
+
+Static argument bytes are exact (recomputed from the program specs and
+sharding rules with a shape-only mesh — no devices needed). The residual
+estimate is L x B_local/mb x S x D x 2B (the remat-saved layer inputs).
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, get_shape  # noqa: E402
+from repro.data.batches import prefill_specs, train_specs  # noqa: E402
+from repro.models.transformer import LM  # noqa: E402
+from repro.parallel.sharding import rules_for, spec_for  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+HBM = 16 * 1024**3
+
+
+class ShapeMesh:
+    def __init__(self, multi_pod: bool):
+        self.shape = (
+            {"pod": 2, "data": 16, "model": 16} if multi_pod else
+            {"data": 16, "model": 16}
+        )
+
+
+def _shard_bytes(sds, axes, rules, mesh) -> int:
+    spec = spec_for(sds.shape, axes, rules, mesh)
+    denom = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in entry if isinstance(entry, tuple) else (entry,):
+            denom *= mesh.shape[a]
+    return math.prod(sds.shape) * sds.dtype.itemsize // denom
+
+
+def static_args(arch: str, shape: str, multi_pod: bool) -> dict:
+    cell = get_shape(shape)
+    cfg = get_config(arch)
+    model = LM(cfg)
+    mesh = ShapeMesh(multi_pod)
+    kind = "long" if cell.name == "long_500k" else cell.kind
+    rules = rules_for(kind, multi_pod=multi_pod)
+    out = {"bf16": 0, "f32": 0, "other": 0}
+
+    def add(axes, sds):
+        b = _shard_bytes(sds, axes, rules, mesh)
+        key = {jnp.bfloat16: "bf16", jnp.float32: "f32"}.get(
+            sds.dtype.type, "other"
+        )
+        out[key] += b
+
+    if cell.kind == "train":
+        pshapes = model.param_shapes(jnp.float32)
+        paxes = model.param_axes()
+        for _ in range(3):  # params + adam m + adam v
+            jax.tree.map(
+                add, paxes, pshapes, is_leaf=lambda x: isinstance(x, tuple)
+            )
+        for k, v in train_specs(cfg, cell).items():
+            add(("batch", "seq") if v.ndim == 2 else ("batch", "seq", "embed"), v)
+    else:
+        pshapes = model.param_shapes(jnp.bfloat16)
+        paxes = model.param_axes()
+        jax.tree.map(add, paxes, pshapes, is_leaf=lambda x: isinstance(x, tuple))
+        if cell.kind == "decode":
+            cs = model.cache_spec(cell.global_batch, cell.seq_len,
+                                  enc_len=cell.seq_len if cfg.is_encoder_decoder else None)
+            cax = model.cache_axes(cs)
+            jax.tree.map(add, cax, cs, is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            for k, v in prefill_specs(cfg, cell).items():
+                add(("batch", "seq") if v.ndim == 2 else ("batch", "seq", "embed"), v)
+    return out
+
+
+def resid_estimate(arch: str, shape: str, multi_pod: bool, microbatches: int) -> int:
+    cell = get_shape(shape)
+    if cell.kind != "train":
+        return 0
+    cfg = get_config(arch)
+    shards = 32 if multi_pod else 16
+    b_local = max(1, cell.global_batch // shards // max(microbatches, 1))
+    layers = cfg.num_layers + (cfg.num_encoder_layers or 0)
+    return layers * b_local * cell.seq_len * cfg.d_model * 2
+
+
+def main():
+    over_raw, over_corr = [], []
+    for p in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok" or rec.get("variant", "baseline") != "baseline":
+            continue
+        multi = rec["mesh"] == "2x16x16"
+        st = static_args(rec["arch"], rec["shape"], multi)
+        mb = rec.get("full", {}).get("microbatches") or 1
+        resid = resid_estimate(rec["arch"], rec["shape"], multi, mb)
+        raw = rec["full"]["per_device_bytes_estimate"]
+        corrected = raw - 2 * st["bf16"] - resid
+        rec["full"]["static_args_bytes"] = st
+        rec["full"]["cpu_upcast_correction"] = {
+            "bf16_args_f32_copies": 2 * st["bf16"],
+            "train_resid_f32_copies": resid,
+            "corrected_per_device_bytes": corrected,
+            "fits_hbm_tpu_estimate": bool(corrected <= HBM),
+        }
+        p.write_text(json.dumps(rec, indent=1))
+        if raw > HBM:
+            over_raw.append((rec["arch"], rec["shape"], rec["mesh"]))
+            if corrected > HBM:
+                over_corr.append(
+                    (rec["arch"], rec["shape"], rec["mesh"],
+                     round(corrected / 2**30, 1))
+                )
+    print(f"over raw: {len(over_raw)}  over corrected: {len(over_corr)}")
+    for o in over_corr:
+        print("  still over:", o)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""One benchmark per paper table/figure (PixelsDB, PVLDB'25).
+
+Each function returns (rows, derived) where rows is the table/figure data
+and derived the headline numbers the paper reports.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import Policy, generate, run_sim, stream_histogram  # noqa: E402
+from repro.core.workload import TABLE1  # noqa: E402
+
+HORIZON = 14_400.0
+_CACHE: dict = {}
+
+
+def _runs():
+    if "runs" not in _CACHE:
+        out = {}
+        for name, kw in [
+            ("auto_sla", dict(policy=Policy.AUTO, sla_enabled=True)),
+            ("auto_nosla", dict(policy=Policy.AUTO, sla_enabled=False)),
+            ("force_sla", dict(policy=Policy.FORCE, sla_enabled=True)),
+        ]:
+            qs = generate(horizon_s=HORIZON, seed=0)
+            out[name] = run_sim(qs, **kw)
+        _CACHE["runs"] = out
+    return _CACHE["runs"]
+
+
+def table1_workloads():
+    """Table 1: datasets, workload patterns, query counts, SLA mixes."""
+    qs = generate(horizon_s=HORIZON, seed=0)
+    rows = []
+    for spec in TABLE1:
+        mine = [q for q in qs if q.source == spec.name]
+        mix = {}
+        for q in mine:
+            mix[q.sla.short] = mix.get(q.sla.short, 0) + 1
+        rows.append(
+            dict(db=spec.name, size_gb=spec.db_gb, arch=spec.arch,
+                 count=len(mine), sla_mix=mix)
+        )
+    derived = {"total_queries": sum(r["count"] for r in rows)}
+    return rows, derived
+
+
+def fig5_stream():
+    """Fig 5: merged query stream of the five workloads."""
+    qs = generate(horizon_s=HORIZON, seed=0)
+    hist, edges = stream_histogram(qs, HORIZON, bins=48)
+    peak = max(max(v) for v in hist.values())
+    return hist, {"bins": len(edges) - 1, "peak_bin_count": peak}
+
+
+def fig6_exec_time():
+    """Fig 6: cumulative execution time by submitted SLA, per config."""
+    rows = {}
+    for name, res in _runs().items():
+        rows[name] = {k: round(v, 1) for k, v in res.exec_time_by_sla().items()}
+    # paper §5.2: force w/ SLA inflates relaxed/BoE exec (squeezed into VM);
+    # auto w/ SLA is comparable to w/o SLA
+    derived = {
+        "force_rel_vs_auto_rel": round(
+            rows["force_sla"]["rel"] / max(rows["auto_sla"]["rel"], 1e-9), 2
+        ),
+        "auto_sla_vs_nosla_imm": round(
+            rows["auto_sla"]["imm"] / max(rows["auto_nosla"]["imm"], 1e-9), 2
+        ),
+    }
+    return rows, derived
+
+
+def fig7_cost():
+    """Fig 7: cumulative cost by submitted SLA; headline reductions."""
+    runs = _runs()
+    rows = {
+        name: dict(
+            total=round(res.total_cost(), 2),
+            **{k: round(v, 2) for k, v in res.cost_by_sla().items()},
+        )
+        for name, res in runs.items()
+    }
+    base = rows["auto_nosla"]["total"]
+    derived = {
+        "auto_sla_reduction": round(1 - rows["auto_sla"]["total"] / base, 3),
+        "force_sla_reduction": round(1 - rows["force_sla"]["total"] / base, 3),
+        "paper_auto_reduction": 0.222,
+        "paper_force_reduction": 0.655,
+        "imm_increase_auto": round(
+            rows["auto_sla"]["imm"] / rows["auto_nosla"]["imm"] - 1, 3
+        ),
+        "imm_increase_force": round(
+            rows["force_sla"]["imm"] / rows["auto_nosla"]["imm"] - 1, 3
+        ),
+    }
+    return rows, derived
+
+
+def sla_guarantees():
+    """§4.2/§5 claim: pending-time guarantees hold in every configuration."""
+    rows = {}
+    for name, res in _runs().items():
+        rows[name] = {
+            "violations": len(res.pending_violations(300.0)),
+            "max_rel_pending_s": round(
+                max((q.pending_time or 0.0 for q in res.by_sla()["rel"]),
+                    default=0.0), 1,
+            ),
+            "finished": res.summary()["finished"],
+        }
+    derived = {"total_violations": sum(r["violations"] for r in rows.values())}
+    return rows, derived
+
+
+def sos_vs_pos_determinism():
+    """§3.3 vision / §5.3 lessons: SOS is deterministic, POS is not."""
+    from repro.core import Query, QueryWork, ServiceLevel
+    from repro.core.sla import SLAConfig
+
+    def probe_exec(mode, n_bg):
+        qs = [Query(work=QueryWork(arch="paper-default", prompt_tokens=500_000),
+                    sla=ServiceLevel.IMMEDIATE, submit_time=0.0)]
+        qs += [Query(work=QueryWork(arch="paper-default", prompt_tokens=2_000_000),
+                     sla=ServiceLevel.IMMEDIATE, submit_time=0.0)
+               for _ in range(n_bg)]
+        res = run_sim(qs, vm_mode=mode, vm_chips=64, sos_slice_chips=16,
+                      use_calibration=False,
+                      sla=SLAConfig(vm_overload_threshold=10**9))
+        return min(q.exec_time for q in res.queries)
+
+    rows = {
+        mode: {n: round(probe_exec(mode, n), 2) for n in (0, 1, 3, 6)}
+        for mode in ("pos", "sos")
+    }
+    pos_spread = rows["pos"][6] / rows["pos"][0]
+    sos_spread = rows["sos"][6] / rows["sos"][0]
+    return rows, {
+        "pos_slowdown_at_6": round(pos_spread, 2),
+        "sos_slowdown_at_6": round(sos_spread, 2),
+    }
+
+
+def beyond_paper():
+    """Beyond-paper extensions (paper §3.3 opportunities, §5.3 lessons):
+    SOS in the cost-efficient cluster + multi-query fusion."""
+    import numpy as np
+
+    base = run_sim(
+        generate(horizon_s=HORIZON, seed=0), policy=Policy.AUTO, sla_enabled=False
+    ).total_cost()
+    rows = {}
+    for name, kw in [
+        ("force_pos", dict(policy=Policy.FORCE)),
+        ("force_sos_fuse", dict(policy=Policy.FORCE, vm_mode="sos",
+                                sos_slice_chips=1, fuse_queries=True)),
+        ("auto_fuse", dict(policy=Policy.AUTO, fuse_queries=True)),
+    ]:
+        res = run_sim(generate(horizon_s=HORIZON, seed=0), sla_enabled=True, **kw)
+        rel = res.by_sla()["rel"]
+        lat = [q.latency for q in rel if q.latency is not None]
+        rows[name] = {
+            "total": round(res.total_cost(), 2),
+            "reduction": round(1 - res.total_cost() / base, 3),
+            "violations": len(res.pending_violations(300.0)),
+            "rel_p95_latency_s": round(float(np.percentile(lat, 95)), 0),
+        }
+    derived = {
+        "sos_fuse_rel_p95_speedup": round(
+            rows["force_pos"]["rel_p95_latency_s"]
+            / rows["force_sos_fuse"]["rel_p95_latency_s"], 2,
+        ),
+        "auto_fuse_reduction": rows["auto_fuse"]["reduction"],
+        "force_sos_fuse_reduction": rows["force_sos_fuse"]["reduction"],
+    }
+    return rows, derived

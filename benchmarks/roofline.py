@@ -1,0 +1,150 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json produced by ``repro.launch.dryrun`` (the only
+process allowed to fake 512 devices) and derives, per (arch x shape x
+mesh): the three roofline terms, the bottleneck, MODEL_FLOPS/HLO ratio,
+and roofline fraction (model-flops time at peak / achievable step time).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config, get_shape  # noqa: E402
+from repro.core.cost_model import _analytic_step, _decode_step_time  # noqa: E402
+from repro.perf.hw import V5E  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def ideal_step_s(arch: str, shape: str, chips: int) -> float:
+    """Analytic lower bound for the cell: max(model-flops compute time,
+    minimal-bytes memory time). Decode is judged against its own memory
+    roofline (weights + KV/state streamed once), not model flops."""
+    cfg = get_config(arch)
+    cell = get_shape(shape)
+    if cell.kind == "decode":
+        return _decode_step_time(cfg, cell.global_batch, cell.seq_len, chips)
+    tokens = cell.global_batch * cell.seq_len
+    return _analytic_step(cfg, tokens, cell.kind if cell.kind == "train" else "serve", chips)
+
+
+def load_records(variant: str | None = None) -> list[dict]:
+    recs = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        v = r.get("variant", "baseline")
+        if variant is not None and v != variant:
+            continue
+        if variant is None and v != "baseline":
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_rows(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                             status="skipped", why=r.get("skip_reason", "")))
+            continue
+        if r.get("status") != "ok" or "roofline" not in r:
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             mesh=r.get("mesh", "?"), status=r.get("status")))
+            continue
+        t = r["roofline"]["terms"]
+        ideal = ideal_step_s(r["arch"], r["shape"], r["chips"])
+        frac = ideal / t["step_s"] if t["step_s"] else 0.0
+        rows.append(
+            dict(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"], status="ok",
+                compute_s=t["compute_s"], memory_s=t["memory_s"],
+                collective_s=t["collective_s"], step_s=t["step_s"],
+                bottleneck=t["bottleneck"],
+                useful=r["roofline"]["useful_ratio"],
+                roofline_frac=frac,
+                fits_hbm=r["full"]["fits_hbm"],
+                per_dev_gb=r["full"]["per_device_bytes_estimate"] / 2**30,
+            )
+        )
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    out = [
+        f"{'arch':24s} {'shape':12s} {'mesh':8s} {'comp_s':>9s} {'mem_s':>9s}"
+        f" {'coll_s':>9s} {'step_s':>9s} {'bneck':>10s} {'useful':>7s}"
+        f" {'RLfrac':>7s} {'fits':>5s}"
+    ]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(
+                f"{r['arch']:24s} {r['shape']:12s} {r.get('mesh','?'):8s}"
+                f" -- {r.get('status')}: {r.get('why','')[:60]}"
+            )
+            continue
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s}"
+            f" {r['compute_s']:9.4f} {r['memory_s']:9.4f} {r['collective_s']:9.4f}"
+            f" {r['step_s']:9.4f} {r['bottleneck']:>10s} {r['useful']:7.3f}"
+            f" {r['roofline_frac']:7.3f} {str(r['fits_hbm']):>5s}"
+        )
+    return "\n".join(out)
+
+
+def main():
+    rows = roofline_rows(load_records())
+    print(fmt_table(rows))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = sorted(ok, key=lambda r: r["roofline_frac"])[:3]
+        coll = [r for r in ok if r["bottleneck"] == "collective"]
+        print(f"\ncells={len(rows)} ok={len(ok)}"
+              f" collective-bound={len(coll)}")
+        print("worst roofline fractions:",
+              [(r['arch'], r['shape'], r['mesh'], round(r['roofline_frac'], 3))
+               for r in worst])
+
+
+if __name__ == "__main__":
+    main()
+
+
+def variant_rows() -> list[dict]:
+    """Baseline vs best-measured-variant per cell (the §Perf wins)."""
+    base: dict[tuple, dict] = {}
+    variants: dict[tuple, list[dict]] = {}
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        if r.get("variant", "baseline") in ("baseline",):
+            base[key] = r
+        else:
+            variants.setdefault(key, []).append(r)
+    rows = []
+    for key, vs in sorted(variants.items()):
+        if key not in base:
+            continue
+        b = base[key]["roofline"]["terms"]["step_s"]
+
+        def _fits(r):
+            c = r["full"].get("cpu_upcast_correction", {})
+            return r["full"]["fits_hbm"] or c.get("fits_hbm_tpu_estimate", True)
+
+        fitting = [r for r in vs if _fits(r)] or vs
+        best = min(fitting, key=lambda r: r["roofline"]["terms"]["step_s"])
+        v = best["roofline"]["terms"]["step_s"]
+        if v >= b * 0.999:
+            continue  # only report wins
+        rows.append(dict(
+            arch=key[0], shape=key[1], mesh=key[2],
+            variant=best["variant"],
+            baseline_s=b, optimized_s=v, speedup=b / v,
+        ))
+    return rows

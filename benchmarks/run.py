@@ -1,0 +1,76 @@
+"""Benchmark harness: one function per paper table/figure + the roofline
+table. Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import paper, roofline  # noqa: E402
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    rows, derived = fn()
+    dt_us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{dt_us:.0f},{json.dumps(derived)}")
+    return rows, derived
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    _run("table1_workloads", paper.table1_workloads)
+    _run("fig5_stream", paper.fig5_stream)
+    _run("fig6_exec_time", paper.fig6_exec_time)
+    rows7, d7 = _run("fig7_cost", paper.fig7_cost)
+    _run("sla_guarantees", paper.sla_guarantees)
+    _run("sos_vs_pos_determinism", paper.sos_vs_pos_determinism)
+    _run("beyond_paper", paper.beyond_paper)
+
+    def _roofline():
+        rows = roofline.roofline_rows(roofline.load_records())
+        ok = [r for r in rows if r.get("status") == "ok"]
+        derived = {
+            "cells": len(rows),
+            "ok": len(ok),
+            "median_roofline_frac": round(
+                sorted(r["roofline_frac"] for r in ok)[len(ok) // 2], 3
+            ) if ok else None,
+        }
+        return rows, derived
+
+    rows, _ = _run("roofline_table", _roofline)
+
+    def _variants():
+        vr = roofline.variant_rows()
+        derived = {
+            "cells_improved": len(vr),
+            "max_speedup": round(max((r["speedup"] for r in vr), default=1), 2),
+            "median_speedup": round(
+                sorted(r["speedup"] for r in vr)[len(vr) // 2], 2
+            ) if vr else 1.0,
+        }
+        return vr, derived
+
+    vrows, _ = _run("perf_variants", _variants)
+
+    # human-readable appendix
+    print("\n--- fig7 detail ---")
+    for k, v in rows7.items():
+        print(f"  {k}: {v}")
+    print("\n--- §Perf: baseline vs best measured variant ---")
+    for r in vrows:
+        print(f"  {r['arch']:24s} {r['shape']:12s} {r['mesh']:8s}"
+              f" {r['variant']:18s} {r['baseline_s']*1e3:9.2f} ->"
+              f" {r['optimized_s']*1e3:9.2f} ms  ({r['speedup']:.2f}x)")
+
+    print("\n--- roofline table (baseline variant) ---")
+    print(roofline.fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fault-tolerant training demo: crash mid-run, restart, exact resume.
+
+    PYTHONPATH=src python examples/train_ft.py
+"""
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import SimulatedFailure, train
+
+
+def main():
+    ckpt = Path(tempfile.mkdtemp(prefix="repro_ft_"))
+    kw = dict(steps=20, batch=4, seq=32, ckpt_every=5, log_every=5,
+              ckpt_dir=str(ckpt))
+    print("== run with an injected failure at step 13 ==")
+    try:
+        train("qwen2-0.5b", fail_at=13, **kw)
+    except SimulatedFailure as e:
+        print(f"!! {e} — restarting from the latest checkpoint")
+    out = train("qwen2-0.5b", **kw)
+    print(f"resumed and finished: final loss {out['final_loss']:.4f}"
+          f" (ran {out['steps_run']} steps after restart)")
+    shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""The paper's contribution: flexible performance SLAs for serverless
+query processing, with SOS (stage-oriented scaling) execution."""
+from .clusters import (
+    AutoscaleConfig,
+    CostEfficientCluster,
+    FaultModel,
+    HighElasticCluster,
+)
+from .insights import CostExplorer, export_trace, price_menu
+from .cost_model import CostModel, Stage, StagePlan
+from .query import Query, QueryWork
+from .scheduler import BoEScheduler, QueryCoordinator, RelaxedScheduler, ServiceLayer
+from .simulator import SimConfig, SimResult, Simulation, run_sim
+from .sla import Policy, ServiceLevel, SLAConfig
+from .workload import TABLE1, generate, stream_histogram

@@ -1,0 +1,293 @@
+"""Cluster models: cost-efficient (reserved pod slice) vs high-elastic
+(on-demand burst slices) — paper §4.3's spot-VM vs cloud-function pair,
+instantiated for TPU (DESIGN.md §2).
+
+The cost-efficient cluster supports two execution modes:
+  POS  — plan-oriented scaling (paper's Trino VM cluster): admitted
+         queries share the whole slice under processor sharing with a
+         concurrency interference penalty. Per-query times depend on what
+         else is running — the nondeterminism the paper's §5.3 "lessons
+         learned" complains about.
+  SOS  — stage-oriented scaling: each query's stages run on an isolated
+         fixed-size sub-slice with deterministic roofline times; queries
+         wait when no slice is free.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..perf.hw import V5E, HwSpec
+from .cost_model import CostModel
+from .query import Query
+
+
+@dataclass
+class AutoscaleConfig:
+    """Elastic scaling of the reserved slice (the paper notes spot VMs
+    scale in minutes — modeled as a provisioning delay). Scale-out when
+    the running queue stays above the high watermark; scale-in when it
+    falls below the low watermark."""
+
+    enabled: bool = False
+    min_chips: int = 4
+    max_chips: int = 64
+    step_chips: int = 4
+    scale_delay_s: float = 180.0  # minutes-scale provisioning (paper §4.3)
+    high_watermark: int = 8  # run-queue length triggering scale-out
+    low_watermark: int = 1
+
+
+@dataclass
+class FaultModel:
+    """Stage-level failures and stragglers (simulated; SOS executors
+    retry failed stages and speculatively duplicate stragglers)."""
+
+    failure_prob: float = 0.0  # per stage
+    straggler_prob: float = 0.0  # per stage
+    straggler_scale: float = 1.0  # Expo mean of extra relative time
+    speculation: bool = True  # duplicate stragglers (cap the tail)
+    speculation_cap: float = 0.3  # dup launched after 30% over estimate
+
+    def stage_time(self, base: float, rng: np.random.Generator, q: Query) -> float:
+        t = base
+        if self.failure_prob and rng.random() < self.failure_prob:
+            q.retries += 1
+            t += base  # one retry of the whole stage
+        if self.straggler_prob and rng.random() < self.straggler_prob:
+            tail = base * rng.exponential(self.straggler_scale)
+            if self.speculation:
+                tail = min(tail, base * self.speculation_cap)
+                q.chip_seconds += base  # the duplicate's resources
+            t += tail
+        return t
+
+
+class _Running:
+    __slots__ = ("query", "remaining", "last_update")
+
+    def __init__(self, query: Query, remaining: float, now: float):
+        self.query = query
+        self.remaining = remaining  # chip-seconds of work left
+        self.last_update = now
+
+
+class CostEfficientCluster:
+    """Reserved slice: `chips` chips at reserved unit price."""
+
+    def __init__(
+        self,
+        chips: int = 256,
+        mode: str = "pos",  # pos | sos
+        max_concurrent: int = 8,  # POS admission cap (Trino-style)
+        interference_alpha: float = 0.3,
+        sos_slice_chips: int = 32,
+        cost_model: Optional[CostModel] = None,
+        hw: HwSpec = V5E,
+        fault: Optional[FaultModel] = None,
+        rng: Optional[np.random.Generator] = None,
+        autoscale: Optional[AutoscaleConfig] = None,
+    ):
+        self.chips = chips
+        self.mode = mode
+        self.max_concurrent = max_concurrent
+        self.alpha = interference_alpha
+        self.autoscale = autoscale or AutoscaleConfig()
+        self._pending_scale: list[tuple[float, int]] = []  # (effective_at, chips)
+        self.chip_seconds_provisioned = 0.0  # reserved-capacity accounting
+        self._last_prov_t = 0.0
+        self.slice_chips = sos_slice_chips
+        self.cost_model = cost_model or CostModel()
+        self.hw = hw
+        self.fault = fault or FaultModel()
+        self.rng = rng or np.random.default_rng(0)
+        self.running: list[_Running] = []
+        self.waiting: list[Query] = []  # SOS: queries waiting for a slice
+        self.price_per_chip_s = hw.reserved_price / 3600.0
+
+    # --- the paper's "VM running queue" the coordinator watches ---
+    @property
+    def run_queue_len(self) -> int:
+        return len(self.running) + len(self.waiting)
+
+    @property
+    def idle(self) -> bool:
+        return self.run_queue_len == 0
+
+    # --- POS processor-sharing dynamics ---
+    def _eff_rate_per_query(self) -> float:
+        """Aggregate chips each running query receives under PS with an
+        interference penalty 1/(1 + alpha*(k-1))."""
+        k = len(self.running)
+        if k == 0:
+            return float(self.chips)
+        return (self.chips / k) / (1.0 + self.alpha * (k - 1))
+
+    def _apply_autoscale(self, now: float) -> None:
+        a = self.autoscale
+        if not a.enabled:
+            return
+        # provisioned chip-seconds (idle capacity is paid for too)
+        self.chip_seconds_provisioned += self.chips * (now - self._last_prov_t)
+        self._last_prov_t = now
+        # apply due capacity changes
+        due = [c for t, c in self._pending_scale if t <= now]
+        if due:
+            self.chips = due[-1]
+            self._pending_scale = [
+                (t, c) for t, c in self._pending_scale if t > now
+            ]
+        target = None
+        if self.run_queue_len >= a.high_watermark and self.chips < a.max_chips:
+            target = min(a.max_chips, self.chips + a.step_chips)
+        elif self.run_queue_len <= a.low_watermark and self.chips > a.min_chips:
+            target = max(a.min_chips, self.chips - a.step_chips)
+        if target is not None and not self._pending_scale:
+            self._pending_scale.append((now + a.scale_delay_s, target))
+
+    def _advance(self, now: float) -> None:
+        self._apply_autoscale(now)
+        rate = self._eff_rate_per_query()
+        for r in self.running:
+            r.remaining -= rate * (now - r.last_update)
+            r.last_update = now
+
+    def submit(self, q: Query, now: float) -> None:
+        q.cluster = "vm"
+        if self.mode == "pos":
+            self.waiting.append(q)
+            self._admit_pos(now)
+        else:  # SOS: wait for a free fixed-size slice
+            self.waiting.append(q)
+            self._try_start_sos(now)
+
+    def _admit_pos(self, now: float) -> None:
+        self._advance(now)
+        while self.waiting and len(self.running) < self.max_concurrent:
+            q = self.waiting.pop(0)
+            work_cs = self.cost_model.chip_seconds(q.work, self.chips)
+            q.start_time = now
+            q.chip_seconds += work_cs
+            self.running.append(_Running(q, work_cs, now))
+
+    def _try_start_sos(self, now: float) -> None:
+        used = len(self.running) * self.slice_chips
+        while self.waiting and used + self.slice_chips <= self.chips:
+            q = self.waiting.pop(0)
+            plan = self.cost_model.plan(q.work, self.slice_chips)
+            t = sum(
+                self.fault.stage_time(s.time_s, self.rng, q) for s in plan.stages
+            )
+            q.start_time = now
+            q.chip_seconds += plan.chip_seconds
+            r = _Running(q, t, now)  # SOS remaining is SECONDS (fixed rate 1)
+            self.running.append(r)
+            used += self.slice_chips
+
+    def next_completion(self, now: float) -> Optional[float]:
+        """Earliest absolute finish time among running queries."""
+        if not self.running:
+            return None
+        if self.mode == "pos":
+            rate = self._eff_rate_per_query()
+            self._advance(now)
+            return now + min(max(r.remaining, 0.0) / rate for r in self.running)
+        return now + min(max(r.remaining - (now - r.last_update), 0.0)
+                         for r in self.running)
+
+    def collect_finished(self, now: float) -> list[Query]:
+        done: list[Query] = []
+        if self.mode == "pos":
+            self._advance(now)
+            eps = 1e-9
+            still = []
+            for r in self.running:
+                if r.remaining <= eps:
+                    r.query.finish_time = now
+                    done.append(r.query)
+                else:
+                    still.append(r)
+            self.running = still
+            self._admit_pos(now)
+        else:
+            still = []
+            for r in self.running:
+                if (now - r.last_update) >= r.remaining - 1e-9:
+                    r.query.finish_time = now
+                    done.append(r.query)
+                else:
+                    still.append(r)
+            self.running = still
+            self._try_start_sos(now)
+        for q in done:
+            q.cost += q.chip_seconds * self.price_per_chip_s
+        return done
+
+
+class HighElasticCluster:
+    """On-demand burst slices: unbounded, seconds-level provisioning,
+    `elastic_price_multiplier`x unit price (paper's CF: 9-24x)."""
+
+    def __init__(
+        self,
+        cost_model: Optional[CostModel] = None,
+        hw: HwSpec = V5E,
+        startup_s: float = 2.0,
+        min_chips: int = 4,
+        max_chips: int = 64,
+        tokens_per_chip: int = 262_144,
+        fault: Optional[FaultModel] = None,
+        rng: Optional[np.random.Generator] = None,
+        price_multiplier: Optional[float] = None,
+    ):
+        self.cost_model = cost_model or CostModel()
+        self.hw = hw
+        self.startup_s = startup_s
+        mult = (
+            price_multiplier
+            if price_multiplier is not None
+            else hw.elastic_price_multiplier
+        )
+        self.min_chips = min_chips
+        self.max_chips = max_chips
+        self.tokens_per_chip = tokens_per_chip
+        self.fault = fault or FaultModel()
+        self.rng = rng or np.random.default_rng(1)
+        self.running: list[tuple[float, Query]] = []  # (finish_time, q)
+        self.price_per_chip_s = hw.reserved_price * mult / 3600.0
+
+    @property
+    def run_queue_len(self) -> int:
+        return len(self.running)
+
+    def slice_for(self, q: Query) -> int:
+        """Bigger queries get bigger slices (paper §5.2: CF dynamically
+        allocates more resources to big queries)."""
+        want = math.ceil(q.work.total_tokens / self.tokens_per_chip)
+        return int(min(self.max_chips, max(self.min_chips, want)))
+
+    def submit(self, q: Query, now: float) -> None:
+        q.cluster = "cf"
+        chips = self.slice_for(q)
+        plan = self.cost_model.plan(q.work, chips)
+        t = sum(self.fault.stage_time(s.time_s, self.rng, q) for s in plan.stages)
+        q.start_time = now + self.startup_s
+        q.chip_seconds += plan.chip_seconds
+        finish = q.start_time + t
+        q.cost += q.chip_seconds * self.price_per_chip_s
+        self.running.append((finish, q))
+
+    def next_completion(self, now: float) -> Optional[float]:
+        if not self.running:
+            return None
+        return min(f for f, _ in self.running)
+
+    def collect_finished(self, now: float) -> list[Query]:
+        done = [q for f, q in self.running if f <= now + 1e-9]
+        self.running = [(f, q) for f, q in self.running if f > now + 1e-9]
+        for q in done:
+            q.finish_time = now
+        return done

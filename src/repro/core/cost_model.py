@@ -1,0 +1,139 @@
+"""Deterministic per-stage cost model — the property that makes SOS
+suitable for flexible SLAs (paper §3.3 vision 1).
+
+A query compiles to a chain of stages; every stage has a roofline time on
+a given worker slice, derived from the same three-term model as
+EXPERIMENTS.md §Roofline. When a dry-run JSON for the (arch, shape) exists
+in results/dryrun/, an empirical calibration factor (compiled HLO terms /
+analytic terms) is applied, closing the loop between the compiled
+artifacts and the scheduler simulation.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+from functools import lru_cache
+from pathlib import Path
+from typing import Optional
+
+from ..configs import get_config
+from ..models.config import ModelConfig
+from ..perf.hw import V5E, HwSpec
+from .query import QueryWork
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+@dataclass(frozen=True)
+class Stage:
+    name: str
+    time_s: float  # on the stage's isolated worker slice
+    chips: int  # worker slice size
+
+    @property
+    def chip_seconds(self) -> float:
+        return self.time_s * self.chips
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    stages: tuple[Stage, ...]
+
+    @property
+    def exec_time(self) -> float:
+        return sum(s.time_s for s in self.stages)
+
+    @property
+    def chip_seconds(self) -> float:
+        return sum(s.chip_seconds for s in self.stages)
+
+
+@lru_cache(maxsize=None)
+def _calibration(arch: str, kind: str) -> float:
+    """HLO-derived step time / analytic step time, from dry-run records."""
+    shape = {"serve": "prefill_32k", "train": "train_4k"}[kind]
+    path = RESULTS / f"{arch}__{shape}__16x16.json"
+    if not path.exists():
+        return 1.0
+    try:
+        rec = json.loads(path.read_text())
+        terms = rec["roofline"]["terms"]
+        cfg = get_config(arch)
+        cell_tokens = {"prefill_32k": 32 * 32768, "train_4k": 256 * 4096}[shape]
+        an = _analytic_step(cfg, cell_tokens, kind, chips=rec["chips"])
+        return max(0.25, min(20.0, terms["step_s"] / an)) if an else 1.0
+    except Exception:
+        return 1.0
+
+
+def _analytic_step(cfg: ModelConfig, tokens: int, kind: str, chips: int,
+                   hw: HwSpec = V5E) -> float:
+    """Analytic roofline step time for `tokens` processed on `chips`."""
+    n_active = cfg.active_params()
+    factor = 6 if kind == "train" else 2
+    flops = factor * n_active * tokens
+    # weight streaming + activations; decode is weight-bound per token
+    bytes_ = 2 * n_active + tokens * cfg.d_model * 2 * max(cfg.num_layers, 1)
+    compute = flops / (chips * hw.peak_flops_bf16)
+    memory = bytes_ / (chips * hw.hbm_bandwidth)
+    return max(compute, memory)
+
+
+def _decode_step_time(cfg: ModelConfig, batch: int, context: int, chips: int,
+                      hw: HwSpec = V5E) -> float:
+    """One decode token for `batch` sequences at a given context length."""
+    n_active = cfg.active_params()
+    flops = 2 * n_active * batch
+    kv = 0
+    for w in cfg.window_pattern():
+        if cfg.attention_free:
+            break
+        eff = min(w, context) if w else context
+        kv += 2 * eff * cfg.num_kv_heads * cfg.head_dim * 2  # k+v bf16
+    ssm = 0
+    if cfg.ssm_state:
+        n_mamba = sum(1 for k in cfg.layer_kinds() if k == "mamba")
+        ssm = n_mamba * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    bytes_ = 2 * n_active + batch * (kv + ssm)
+    compute = flops / (chips * hw.peak_flops_bf16)
+    memory = bytes_ / (chips * hw.hbm_bandwidth)
+    return max(compute, memory)
+
+
+class CostModel:
+    """Maps QueryWork -> StagePlan on a worker slice of `chips` chips."""
+
+    def __init__(self, hw: HwSpec = V5E, use_calibration: bool = True):
+        self.hw = hw
+        self.use_calibration = use_calibration
+
+    def _cal(self, arch: str, kind: str) -> float:
+        return _calibration(arch, kind) if self.use_calibration else 1.0
+
+    def plan(self, work: QueryWork, chips: int) -> StagePlan:
+        cfg = get_config(work.arch)
+        cal = self._cal(work.arch, work.kind)
+        stages: list[Stage] = []
+        if work.kind == "train":
+            t = _analytic_step(cfg, work.batch * work.seq_len, "train", chips)
+            stages.append(Stage("train_steps", cal * t * work.train_steps, chips))
+        else:
+            tp = _analytic_step(
+                cfg, work.batch * work.prompt_tokens, "serve", chips
+            )
+            stages.append(Stage("prefill", cal * tp, chips))
+            if work.output_tokens:
+                td = _decode_step_time(
+                    cfg, work.batch, work.prompt_tokens, chips
+                )
+                stages.append(
+                    Stage("decode", cal * td * work.output_tokens, chips)
+                )
+        return StagePlan(tuple(stages))
+
+    def exec_time(self, work: QueryWork, chips: int) -> float:
+        return self.plan(work, chips).exec_time
+
+    def chip_seconds(self, work: QueryWork, chips: int) -> float:
+        return self.plan(work, chips).chip_seconds

@@ -1,0 +1,161 @@
+"""Cost visibility + price estimation — the user-facing features the
+paper's user study ranked alongside flexible SLAs (Q6: absolute
+performance-price estimates, 67.9% would use; Q7: historical cost
+analysis, 69.7% — §3.2/Fig 1) and the PixelsDB Web UI exposes via
+brushing-and-linking. Programmatic equivalents over Query traces.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from .cost_model import CostModel
+from .query import Query, QueryWork
+from .sla import ServiceLevel
+
+
+# ---------------------------------------------------------------------------
+# Q6: absolute performance-price menu per service level
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Quote:
+    sla: str
+    est_pending_s: float  # worst-case pending under the level's guarantee
+    est_exec_s: float
+    est_cost: float
+
+    def as_dict(self) -> dict:
+        return {
+            "sla": self.sla,
+            "est_pending_s": round(self.est_pending_s, 2),
+            "est_exec_s": round(self.est_exec_s, 2),
+            "est_cost": round(self.est_cost, 4),
+        }
+
+
+def price_menu(
+    work: QueryWork,
+    *,
+    cost_model: Optional[CostModel] = None,
+    vm_chips: int = 4,
+    cf_chips: int = 32,
+    vm_price_s: float = 1.2 / 3600,
+    cf_multiplier: float = 10.0,
+    relaxed_deadline_s: float = 300.0,
+) -> list[Quote]:
+    """The menu a user sees before choosing a service level: each level's
+    worst-case pending time, estimated execution time, and price. Made
+    possible by the deterministic SOS cost model (paper §3.3 vision 1)."""
+    cm = cost_model or CostModel()
+    vm_exec = cm.exec_time(work, vm_chips)
+    vm_cost = cm.chip_seconds(work, vm_chips) * vm_price_s
+    cf_exec = cm.exec_time(work, cf_chips)
+    cf_cost = cm.chip_seconds(work, cf_chips) * vm_price_s * cf_multiplier
+    return [
+        # immediate: may land on the elastic pool under load -> price the
+        # worst case (elastic), exec the fast pool
+        Quote("immediate", 0.0, cf_exec, cf_cost),
+        Quote("relaxed", relaxed_deadline_s, vm_exec, vm_cost),
+        Quote("best_effort", float("inf"), vm_exec, vm_cost),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Q7: historical cost visibility (brushing-and-linking equivalent)
+# ---------------------------------------------------------------------------
+
+class CostExplorer:
+    """Filter/aggregate finished queries the way the Web UI's linked
+    views do: brush on any dimension, read the aggregates."""
+
+    def __init__(self, queries: Iterable[Query]):
+        self.queries = [q for q in queries if q.finish_time is not None]
+
+    def brush(self, **filters) -> "CostExplorer":
+        """Filter by exact attribute values (sla, cluster, source) or
+        callable predicates, e.g. brush(cluster="cf", source="dashboard")
+        or brush(cost=lambda c: c > 1.0)."""
+        out = self.queries
+        for key, want in filters.items():
+            if callable(want):
+                out = [q for q in out if want(getattr(q, key))]
+            elif key == "sla":
+                want_lvl = (
+                    want if isinstance(want, ServiceLevel)
+                    else ServiceLevel[want.upper()]
+                    if isinstance(want, str) and want.upper() in ServiceLevel.__members__
+                    else want
+                )
+                out = [
+                    q for q in out
+                    if q.sla is want_lvl or q.sla.short == str(want)
+                ]
+            else:
+                out = [q for q in out if getattr(q, key) == want]
+        e = CostExplorer([])
+        e.queries = list(out)
+        return e
+
+    def aggregate(self) -> dict:
+        qs = self.queries
+        if not qs:
+            return {"n": 0, "total_cost": 0.0}
+        costs = np.array([q.cost for q in qs])
+        execs = np.array([q.exec_time or 0.0 for q in qs])
+        pend = np.array([q.pending_time or 0.0 for q in qs])
+        return {
+            "n": len(qs),
+            "total_cost": round(float(costs.sum()), 4),
+            "mean_cost": round(float(costs.mean()), 4),
+            "p95_cost": round(float(np.percentile(costs, 95)), 4),
+            "total_exec_s": round(float(execs.sum()), 1),
+            "p95_exec_s": round(float(np.percentile(execs, 95)), 2),
+            "p95_pending_s": round(float(np.percentile(pend, 95)), 2),
+            "vm_share": round(
+                sum(q.cluster == "vm" for q in qs) / len(qs), 3
+            ),
+        }
+
+    def by(self, attr: str) -> dict[str, dict]:
+        """Group-by + aggregate (the "linking" half)."""
+        groups: dict[str, list[Query]] = {}
+        for q in self.queries:
+            val = getattr(q, attr)
+            key = val.short if isinstance(val, ServiceLevel) else str(val)
+            groups.setdefault(key, []).append(q)
+        return {k: CostExplorer(v).aggregate() for k, v in sorted(groups.items())}
+
+    def top(self, n: int = 10, key: str = "cost") -> list[Query]:
+        return sorted(self.queries, key=lambda q: -getattr(q, key))[:n]
+
+
+# ---------------------------------------------------------------------------
+# Observability: structured trace export
+# ---------------------------------------------------------------------------
+
+def export_trace(queries: Iterable[Query], path: str) -> int:
+    """JSONL query trace (one record per query) for offline analysis."""
+    n = 0
+    with open(path, "w") as f:
+        for q in queries:
+            f.write(json.dumps({
+                "qid": q.qid,
+                "source": q.source,
+                "arch": q.work.arch,
+                "sla": q.sla.short,
+                "effective_sla": q.effective_sla.short if q.effective_sla else None,
+                "submit": q.submit_time,
+                "dequeue": q.dequeue_time,
+                "start": q.start_time,
+                "finish": q.finish_time,
+                "cluster": q.cluster,
+                "chip_seconds": round(q.chip_seconds, 4),
+                "cost": round(q.cost, 6),
+                "retries": q.retries,
+            }) + "\n")
+            n += 1
+    return n

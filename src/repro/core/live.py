@@ -1,0 +1,205 @@
+"""LIVE execution backend for the SLA service: the same ServiceLayer /
+schedulers / coordinator drive real jitted JAX work on this host.
+
+The simulator (simulator.py) answers "what would this schedule cost on a
+TPU fleet"; the live engine proves the scheduling layer is a real runtime,
+not a model: queries run reduced-config models, the cost-efficient
+"cluster" is a single worker thread (serialized, interference-free), and
+the high-elastic "cluster" is an unbounded thread pool with a simulated
+provisioning delay. Used by examples/serve_sla.py and tests/test_live.py.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models.transformer import LM
+from ..perf.hw import V5E
+from .query import Query
+from .sla import Policy, ServiceLevel, SLAConfig
+
+
+class _ModelPool:
+    """Jitted reduced models, shared by both clusters."""
+
+    def __init__(self):
+        self._models: dict[str, tuple[LM, dict]] = {}
+        self._lock = threading.Lock()
+
+    def get(self, arch: str):
+        with self._lock:
+            if arch not in self._models:
+                cfg = get_config(arch, reduced=True)
+                model = LM(cfg)
+                params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+                self._models[arch] = (model, params)
+            return self._models[arch]
+
+
+@dataclass
+class LiveConfig:
+    policy: Policy = Policy.AUTO
+    sla_enabled: bool = True
+    sla: SLAConfig = field(
+        default_factory=lambda: SLAConfig(
+            relaxed_deadline_s=10.0, poll_period_s=0.05, vm_overload_threshold=2
+        )
+    )
+    cf_startup_s: float = 0.3
+    vm_price: float = 1.0  # $ per worker-second
+    cf_price_multiplier: float = 10.0
+    prompt_tokens: int = 32
+    decode_tokens: int = 4
+
+
+class LiveEngine:
+    """Thread-backed mirror of the simulator's cluster pair."""
+
+    def __init__(self, cfg: LiveConfig):
+        self.cfg = cfg
+        self.pool = _ModelPool()
+        self.vm_queue: "queue.Queue[Optional[Query]]" = queue.Queue()
+        self.cf_pool = ThreadPoolExecutor(max_workers=16)
+        self.relaxed: list[Query] = []
+        self.boe: list[Query] = []
+        self.done: list[Query] = []
+        self._lock = threading.Lock()
+        self._vm_busy = 0
+        self._t0 = time.monotonic()
+        self._stop = threading.Event()
+        self._vm_thread = threading.Thread(target=self._vm_loop, daemon=True)
+        self._sched_thread = threading.Thread(target=self._sched_loop, daemon=True)
+        self._vm_thread.start()
+        self._sched_thread.start()
+
+    # ------------------------------------------------------------------
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _run_query(self, q: Query, price: float) -> None:
+        model, params = self.pool.get(q.work.arch)
+        cfg = model.cfg
+        q.start_time = self.now()
+        toks = jax.random.randint(
+            jax.random.PRNGKey(q.qid),
+            (max(1, q.work.batch), self.cfg.prompt_tokens),
+            0,
+            cfg.vocab_size,
+        )
+        kw = {}
+        if cfg.is_encoder_decoder:
+            kw["enc_embeds"] = jnp.zeros(
+                (toks.shape[0], toks.shape[1], cfg.d_model), jnp.float32
+            )
+        if cfg.frontend == "vision_patches":
+            kw["frontend_embeds"] = jnp.zeros(
+                (toks.shape[0], cfg.frontend_tokens, cfg.d_model), jnp.float32
+            )
+        logits, cache = model.prefill(
+            params, toks, kv_len=self.cfg.prompt_tokens + self.cfg.decode_tokens + 8,
+            dtype=jnp.float32, **kw,
+        )
+        tok = jnp.argmax(logits, -1)[:, None]
+        for _ in range(self.cfg.decode_tokens):
+            logits, cache = model.decode_step(params, cache, tok, dtype=jnp.float32)
+            tok = jnp.argmax(logits, -1)[:, None]
+        jax.block_until_ready(tok)
+        q.finish_time = self.now()
+        q.chip_seconds = q.finish_time - q.start_time  # 1 "chip" worker
+        q.cost = q.chip_seconds * price
+        with self._lock:
+            self.done.append(q)
+
+    # ------------------------------------------------------------------
+    def _vm_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                q = self.vm_queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if q is None:
+                break
+            self._vm_busy += 1
+            try:
+                self._run_query(q, self.cfg.vm_price)
+            finally:
+                self._vm_busy -= 1
+                self.vm_queue.task_done()
+
+    @property
+    def vm_run_queue_len(self) -> int:
+        return self.vm_queue.qsize() + self._vm_busy
+
+    def _route(self, q: Query) -> None:
+        q.dequeue_time = self.now()
+        overloaded = self.vm_run_queue_len >= self.cfg.sla.vm_overload_threshold
+        sla = q.effective_sla
+        if self.cfg.policy is Policy.FORCE:
+            to_vm = sla in (ServiceLevel.RELAXED, ServiceLevel.BEST_EFFORT) or not overloaded
+        else:
+            to_vm = not overloaded
+        if to_vm:
+            q.cluster = "vm"
+            self.vm_queue.put(q)
+        else:
+            q.cluster = "cf"
+
+            def run_cf():
+                time.sleep(self.cfg.cf_startup_s)  # provisioning latency
+                self._run_query(q, self.cfg.vm_price * self.cfg.cf_price_multiplier)
+
+            self.cf_pool.submit(run_cf)
+
+    def _sched_loop(self) -> None:
+        scfg = self.cfg.sla
+        while not self._stop.is_set():
+            now = self.now()
+            with self._lock:
+                # relaxed: overload-aware with deadline force-submit
+                while self.relaxed:
+                    head = self.relaxed[0]
+                    near = now - head.submit_time >= scfg.relaxed_deadline_s * scfg.deadline_slack
+                    can = self.vm_run_queue_len < scfg.vm_overload_threshold
+                    if not (near or can):
+                        break
+                    self._route(self.relaxed.pop(0))
+                # BoE: drain one when idle
+                if self.boe and self.vm_run_queue_len <= scfg.boe_idle_threshold:
+                    self._route(self.boe.pop(0))
+            time.sleep(scfg.poll_period_s)
+
+    # ------------------------------------------------------------------
+    def submit(self, q: Query) -> None:
+        q.submit_time = self.now()
+        q.effective_sla = q.sla if self.cfg.sla_enabled else ServiceLevel.IMMEDIATE
+        if q.effective_sla is ServiceLevel.IMMEDIATE:
+            self._route(q)
+        elif q.effective_sla is ServiceLevel.RELAXED:
+            with self._lock:
+                self.relaxed.append(q)
+        else:
+            with self._lock:
+                self.boe.append(q)
+
+    def drain(self, n_expected: int, timeout: float = 120.0) -> list[Query]:
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            with self._lock:
+                if len(self.done) >= n_expected:
+                    break
+            time.sleep(0.05)
+        self.shutdown()
+        return list(self.done)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        self.vm_queue.put(None)
+        self.cf_pool.shutdown(wait=True)

@@ -1,0 +1,87 @@
+"""Queries: the unit of work of the serverless ML-query service.
+
+In PixelsDB a query is SQL over object storage; in this TPU adaptation a
+query is an analytical ML job against one of the registered architectures
+(DESIGN.md §2): a batched inference request (prefill + N decode tokens)
+or a fixed number of training steps.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .sla import ServiceLevel
+
+_qid = itertools.count()
+
+
+@dataclass
+class QueryWork:
+    """Work descriptor, independent of where it runs."""
+
+    arch: str = "paper-default"
+    kind: str = "serve"  # serve | train
+    batch: int = 1
+    prompt_tokens: int = 1024
+    output_tokens: int = 64
+    train_steps: int = 0
+    seq_len: int = 4096  # train sequence length
+
+    @property
+    def total_tokens(self) -> int:
+        if self.kind == "train":
+            return self.train_steps * self.batch * self.seq_len
+        return self.batch * (self.prompt_tokens + self.output_tokens)
+
+
+@dataclass
+class Query:
+    work: QueryWork
+    sla: ServiceLevel
+    submit_time: float
+    source: str = ""  # workload pattern name (Table 1)
+    latency_target_s: Optional[float] = None  # execution-time SLA (beyond-paper)
+    qid: int = field(default_factory=lambda: next(_qid))
+
+    # lifecycle (filled by the runtime)
+    effective_sla: Optional[ServiceLevel] = None  # after w/o-SLA rewrite
+    dequeue_time: Optional[float] = None
+    start_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    cluster: Optional[str] = None  # "vm" (cost-efficient) | "cf" (elastic)
+    chip_seconds: float = 0.0
+    cost: float = 0.0
+    retries: int = 0
+
+    @property
+    def pending_time(self) -> Optional[float]:
+        """Time in the SLA pending queue (what the guarantee covers)."""
+        if self.dequeue_time is None:
+            return None
+        return self.dequeue_time - self.submit_time
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Cluster admission wait (after SLA dequeue, before execution)."""
+        if self.start_time is None or self.dequeue_time is None:
+            return None
+        return self.start_time - self.dequeue_time
+
+    @property
+    def exec_time(self) -> Optional[float]:
+        if self.finish_time is None or self.start_time is None:
+            return None
+        return self.finish_time - self.start_time
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.submit_time
+
+    def __repr__(self) -> str:  # compact traces
+        return (
+            f"Q{self.qid}[{self.sla.short} {self.work.arch}"
+            f" {self.work.kind} t={self.submit_time:.0f}]"
+        )

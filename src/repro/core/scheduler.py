@@ -1,0 +1,227 @@
+"""The paper's scheduling layer (§4.2 service levels, §4.3 coordinator).
+
+Service layer -> {immediate path, relaxed pending queue, BoE pending queue}
+-> schedulers poll -> query coordinator routes to the cost-efficient (VM)
+or high-elastic (CF) cluster under the Force/Auto policy.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .clusters import CostEfficientCluster, HighElasticCluster
+from .query import Query, QueryWork
+from .sla import Policy, ServiceLevel, SLAConfig
+
+
+def fuse_queries(queries: list[Query], now: float) -> Query:
+    """Merge same-(arch, prompt) queries into one batched query (the
+    multi-query execution opportunity of paper §3.3). Weight streaming
+    amortizes across the fused batch, so the fused plan's chip-seconds are
+    strictly below the sum of the members' individual plans."""
+    head = queries[0]
+    if len(queries) == 1:
+        return head
+    merged = Query(
+        work=QueryWork(
+            arch=head.work.arch,
+            kind=head.work.kind,
+            batch=sum(q.work.batch for q in queries),
+            prompt_tokens=head.work.prompt_tokens,
+            output_tokens=max(q.work.output_tokens for q in queries),
+        ),
+        sla=head.sla,
+        submit_time=min(q.submit_time for q in queries),
+        source=head.source,
+    )
+    merged.members = queries  # type: ignore[attr-defined]
+    for q in queries:
+        q.dequeue_time = now
+    return merged
+
+
+class QueryCoordinator:
+    """Routes a dequeued query to a cluster (paper §4.3)."""
+
+    def __init__(
+        self,
+        vm: CostEfficientCluster,
+        cf: HighElasticCluster,
+        policy: Policy,
+        cfg: SLAConfig,
+    ):
+        self.vm = vm
+        self.cf = cf
+        self.policy = policy
+        self.cfg = cfg
+
+    @property
+    def vm_overloaded(self) -> bool:
+        return self.vm.run_queue_len >= self.cfg.vm_overload_threshold
+
+    # ------------------------------------------------------------------
+    # Beyond-paper: execution-time SLAs. The deterministic SOS cost model
+    # makes admission-time latency quotes possible (paper §3.3 vision 1:
+    # "it is easier to profile and control the performance and cost").
+    # ------------------------------------------------------------------
+    def estimate(self, q: Query) -> dict:
+        """Latency/cost quote for both pools at the current load."""
+        cm = self.vm.cost_model
+        vm_exec = cm.exec_time(q.work, self.vm.chips)
+        # POS: effective rate divides across running queries w/ interference
+        k = self.vm.run_queue_len + 1
+        vm_latency = vm_exec * k * (1.0 + self.vm.alpha * (k - 1))
+        vm_cost = cm.chip_seconds(q.work, self.vm.chips) * self.vm.price_per_chip_s
+        cf_chips = self.cf.slice_for(q)
+        cf_latency = self.cf.startup_s + cm.exec_time(q.work, cf_chips)
+        cf_cost = cm.chip_seconds(q.work, cf_chips) * self.cf.price_per_chip_s
+        return {
+            "vm": {"latency_s": vm_latency, "cost": vm_cost},
+            "cf": {"latency_s": cf_latency, "cost": cf_cost},
+        }
+
+    def route(self, q: Query, now: float) -> str:
+        sla = q.effective_sla if q.effective_sla is not None else q.sla
+        if self.policy is Policy.LATENCY_AWARE:
+            est = self.estimate(q)
+            target = q.latency_target_s
+            ok = {
+                pool: e for pool, e in est.items()
+                if target is None or e["latency_s"] <= target
+            } or est  # nothing meets the target: best effort, cheapest
+            target_pool = min(ok, key=lambda p: ok[p]["cost"])
+            (self.vm if target_pool == "vm" else self.cf).submit(q, now)
+            return target_pool
+        if self.policy is Policy.FORCE:
+            # SLA directly decides the pool: relaxed/BoE are forced into
+            # the cost-efficient cluster; immediate spills to the elastic
+            # cluster only when the VM cluster is overloaded.
+            if sla in (ServiceLevel.RELAXED, ServiceLevel.BEST_EFFORT):
+                target = "vm"
+            else:
+                target = "cf" if self.vm_overloaded else "vm"
+        else:  # AUTO: overload decides, regardless of service level
+            target = "cf" if self.vm_overloaded else "vm"
+        (self.vm if target == "vm" else self.cf).submit(q, now)
+        return target
+
+
+class RelaxedScheduler:
+    """Polls the relaxed pending queue: dequeue when the cost-efficient
+    cluster can execute, or when a query approaches its deadline."""
+
+    def __init__(self, coordinator: QueryCoordinator, cfg: SLAConfig,
+                 fuse: bool = False, fuse_max: int = 8):
+        self.q: deque[Query] = deque()
+        self.coordinator = coordinator
+        self.cfg = cfg
+        self.fuse = fuse
+        self.fuse_max = fuse_max
+
+    def enqueue(self, q: Query) -> None:
+        self.q.append(q)
+
+    def _pop_fused(self, now: float) -> Query:
+        head = self.q.popleft()
+        if not self.fuse:
+            return head
+        same = [
+            q for q in list(self.q)
+            if q.work.arch == head.work.arch
+            and q.work.prompt_tokens == head.work.prompt_tokens
+            and q.work.kind == head.work.kind
+        ][: self.fuse_max - 1]
+        for q in same:
+            self.q.remove(q)
+        return fuse_queries([head] + same, now)
+
+    def poll(self, now: float) -> list[Query]:
+        out = []
+        while self.q:
+            head = self.q[0]
+            deadline_near = (
+                now - head.submit_time
+                >= self.cfg.relaxed_deadline_s * self.cfg.deadline_slack
+            )
+            can_exec = not self.coordinator.vm_overloaded
+            if not (can_exec or deadline_near):
+                break
+            q = self._pop_fused(now)
+            q.dequeue_time = now
+            self.coordinator.route(q, now)
+            out.append(q)
+        return out
+
+
+class BoEScheduler:
+    """Drains the BoE queue whenever the cost-efficient cluster is idle."""
+
+    def __init__(self, coordinator: QueryCoordinator, cfg: SLAConfig,
+                 fuse: bool = False, fuse_max: int = 8):
+        self.q: deque[Query] = deque()
+        self.coordinator = coordinator
+        self.cfg = cfg
+        self.fuse = fuse
+        self.fuse_max = fuse_max
+
+    def enqueue(self, q: Query) -> None:
+        self.q.append(q)
+
+    def poll(self, now: float) -> list[Query]:
+        out = []
+        while self.q and self.coordinator.vm.run_queue_len <= self.cfg.boe_idle_threshold:
+            head = self.q.popleft()
+            if self.fuse:
+                same = [
+                    q for q in list(self.q)
+                    if q.work.arch == head.work.arch
+                    and q.work.prompt_tokens == head.work.prompt_tokens
+                ][: self.fuse_max - 1]
+                for q in same:
+                    self.q.remove(q)
+                head = fuse_queries([head] + same, now)
+            head.dequeue_time = now
+            self.coordinator.route(head, now)
+            out.append(head)
+            # one dequeue per idle observation: re-check occupancy
+        return out
+
+
+class ServiceLayer:
+    """Entry point (paper Fig. 4 left half): SLA-dispatches queries."""
+
+    def __init__(
+        self,
+        coordinator: QueryCoordinator,
+        cfg: SLAConfig,
+        sla_enabled: bool = True,
+        fuse: bool = False,
+    ):
+        self.coordinator = coordinator
+        self.cfg = cfg
+        self.sla_enabled = sla_enabled
+        self.relaxed = RelaxedScheduler(coordinator, cfg, fuse=fuse)
+        self.boe = BoEScheduler(coordinator, cfg, fuse=fuse)
+
+    def submit(self, q: Query, now: float) -> None:
+        # the paper's "w/o SLA" baseline rewrites every query to immediate
+        # (reporting still groups by the SUBMITTED sla, as in Figs. 6-7)
+        q.effective_sla = (
+            q.sla if self.sla_enabled else ServiceLevel.IMMEDIATE
+        )
+        if q.effective_sla is ServiceLevel.IMMEDIATE:
+            q.dequeue_time = now
+            self.coordinator.route(q, now)
+        elif q.effective_sla is ServiceLevel.RELAXED:
+            self.relaxed.enqueue(q)
+        else:
+            self.boe.enqueue(q)
+
+    def poll(self, now: float) -> None:
+        self.relaxed.poll(now)
+        self.boe.poll(now)
+
+    @property
+    def pending(self) -> int:
+        return len(self.relaxed.q) + len(self.boe.q)

@@ -1,0 +1,208 @@
+"""Discrete-event simulation of the full serverless query service.
+
+Events: query arrivals, scheduler polls, cluster completions. Query
+execution times come from the deterministic stage cost model (grounded in
+the dry-run roofline, DESIGN.md §6), so the simulation and the compiled
+artifacts share one source of truth.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+import numpy as np
+
+from .clusters import (
+    AutoscaleConfig,
+    CostEfficientCluster,
+    FaultModel,
+    HighElasticCluster,
+)
+from .cost_model import CostModel
+from .query import Query
+from .scheduler import QueryCoordinator, ServiceLayer
+from .sla import Policy, ServiceLevel, SLAConfig
+
+
+@dataclass
+class SimConfig:
+    policy: Policy = Policy.AUTO
+    sla_enabled: bool = True
+    sla: SLAConfig = field(default_factory=SLAConfig)
+    vm_chips: int = 4  # small reserved slice (paper: one m5.8xlarge)
+    vm_mode: str = "pos"  # paper's current impl: POS (Trino) in the VM
+    interference_alpha: float = 0.5
+    sos_slice_chips: int = 32
+    cf_startup_s: float = 2.0
+    elastic_price_multiplier: float = 10.0  # paper: CF is 9-24x spot VM
+    seed: int = 0
+    use_calibration: bool = True
+    fault: FaultModel = field(default_factory=FaultModel)
+    autoscale: AutoscaleConfig = field(default_factory=AutoscaleConfig)
+    fuse_queries: bool = False  # beyond-paper: multi-query batch fusion
+    horizon_s: Optional[float] = None  # stop collecting after this time
+
+
+@dataclass
+class SimResult:
+    queries: list[Query]
+    cfg: SimConfig
+
+    def by_sla(self) -> dict[str, list[Query]]:
+        out: dict[str, list[Query]] = {"imm": [], "rel": [], "boe": []}
+        for q in self.queries:
+            out[q.sla.short].append(q)
+        return out
+
+    def total_cost(self) -> float:
+        return sum(q.cost for q in self.queries)
+
+    def cost_by_sla(self) -> dict[str, float]:
+        return {k: sum(q.cost for q in v) for k, v in self.by_sla().items()}
+
+    def exec_time_by_sla(self) -> dict[str, float]:
+        return {
+            k: sum(q.exec_time or 0.0 for q in v) for k, v in self.by_sla().items()
+        }
+
+    def pending_violations(self, deadline_s: float) -> list[Query]:
+        return [
+            q
+            for q in self.queries
+            if q.effective_sla is ServiceLevel.RELAXED
+            and q.pending_time is not None
+            and q.pending_time > deadline_s + 1e-6
+        ]
+
+    def cumulative(self, attr: str = "cost") -> dict[str, tuple[list, list]]:
+        """Per-SLA (times, cumulative-values) for Fig 6/7-style curves."""
+        out = {}
+        for k, qs in self.by_sla().items():
+            qs = [q for q in qs if q.finish_time is not None]
+            qs.sort(key=lambda q: q.finish_time)
+            ts, acc, tot = [], [], 0.0
+            for q in qs:
+                tot += getattr(q, attr) if attr == "cost" else (q.exec_time or 0.0)
+                ts.append(q.finish_time)
+                acc.append(tot)
+            out[k] = (ts, acc)
+        return out
+
+    def summary(self) -> dict:
+        by = self.by_sla()
+        deadline = self.cfg.sla.relaxed_deadline_s
+        return {
+            "n": len(self.queries),
+            "finished": sum(q.finish_time is not None for q in self.queries),
+            "total_cost": round(self.total_cost(), 2),
+            "cost_by_sla": {k: round(v, 2) for k, v in self.cost_by_sla().items()},
+            "exec_by_sla": {
+                k: round(v, 1) for k, v in self.exec_time_by_sla().items()
+            },
+            "vm_share": sum(q.cluster == "vm" for q in self.queries)
+            / max(1, len(self.queries)),
+            "violations": len(self.pending_violations(deadline)),
+            "max_rel_pending": max(
+                (q.pending_time or 0.0 for q in by["rel"]), default=0.0
+            ),
+            "mean_imm_pending": float(
+                np.mean([q.pending_time or 0.0 for q in by["imm"]])
+            )
+            if by["imm"]
+            else 0.0,
+        }
+
+
+class Simulation:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        cm = CostModel(use_calibration=cfg.use_calibration)
+        self.vm = CostEfficientCluster(
+            chips=cfg.vm_chips,
+            mode=cfg.vm_mode,
+            interference_alpha=cfg.interference_alpha,
+            sos_slice_chips=cfg.sos_slice_chips,
+            cost_model=cm,
+            fault=cfg.fault,
+            rng=rng,
+            autoscale=cfg.autoscale,
+        )
+        self.cf = HighElasticCluster(
+            cost_model=cm, startup_s=cfg.cf_startup_s, fault=cfg.fault, rng=rng,
+            price_multiplier=cfg.elastic_price_multiplier,
+        )
+        self.coordinator = QueryCoordinator(self.vm, self.cf, cfg.policy, cfg.sla)
+        self.service = ServiceLayer(
+            self.coordinator, cfg.sla, cfg.sla_enabled, fuse=cfg.fuse_queries
+        )
+
+    def run(self, queries: Iterable[Query]) -> SimResult:
+        cfg = self.cfg
+        arrivals = sorted(queries, key=lambda q: q.submit_time)
+        finished: list[Query] = []
+        counter = itertools.count()
+        events: list[tuple[float, int, str]] = []
+
+        def push(t: float, kind: str) -> None:
+            heapq.heappush(events, (t, next(counter), kind))
+
+        for q in arrivals:
+            push(q.submit_time, "arrival")
+        if arrivals:
+            t0 = arrivals[0].submit_time
+            push(t0, "poll")
+        ai = 0
+        last_completion_push = [None, None]
+
+        def refresh_completions(now: float) -> None:
+            for idx, cluster in enumerate((self.vm, self.cf)):
+                nxt = cluster.next_completion(now)
+                if nxt is not None and nxt != last_completion_push[idx]:
+                    push(max(nxt, now), f"complete{idx}")
+                    last_completion_push[idx] = nxt
+
+        while events:
+            now, _, kind = heapq.heappop(events)
+            if kind == "arrival":
+                while ai < len(arrivals) and arrivals[ai].submit_time <= now + 1e-9:
+                    self.service.submit(arrivals[ai], now)
+                    ai += 1
+            elif kind == "poll":
+                self.service.poll(now)
+                if (
+                    ai < len(arrivals)
+                    or self.service.pending
+                    or self.vm.run_queue_len
+                    or self.cf.run_queue_len
+                ):
+                    push(now + cfg.sla.poll_period_s, "poll")
+            elif kind.startswith("complete"):
+                finished.extend(self.vm.collect_finished(now))
+                finished.extend(self.cf.collect_finished(now))
+            refresh_completions(now)
+
+        # unpack fused queries: members share times; cost splits by tokens
+        expanded: list[Query] = []
+        for q in finished:
+            members = getattr(q, "members", None)
+            if not members:
+                expanded.append(q)
+                continue
+            tot = sum(m.work.total_tokens for m in members)
+            for m in members:
+                share = m.work.total_tokens / max(tot, 1)
+                m.start_time = q.start_time
+                m.finish_time = q.finish_time
+                m.cluster = q.cluster
+                m.chip_seconds = q.chip_seconds * share
+                m.cost = q.cost * share
+                expanded.append(m)
+        return SimResult(expanded, cfg)
+
+
+def run_sim(queries: list[Query], **kw) -> SimResult:
+    cfg = SimConfig(**kw)
+    return Simulation(cfg).run(queries)

@@ -1,0 +1,131 @@
+"""Input batches: ShapeDtypeStruct specs (dry-run) + synthetic data (tests).
+
+``input_specs`` is the single source of truth for what every (arch × shape)
+cell feeds its step function — weak-type-correct, shardable, no device
+allocation. ``make_batch`` materializes the same structure with
+deterministic synthetic data for CPU execution.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig, ShapeCell
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text positions after reserving frontend (patch) positions."""
+    if cfg.frontend == "vision_patches":
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+def train_specs(cfg: ModelConfig, cell: ShapeCell, dtype=BF16) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    st = _text_len(cfg, S)
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((B, st), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, st), jnp.int32),
+    }
+    if cfg.frontend == "vision_patches":
+        spec["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), dtype
+        )
+    if cfg.is_encoder_decoder:
+        spec["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype)
+    return spec
+
+
+def prefill_specs(cfg: ModelConfig, cell: ShapeCell, dtype=BF16) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    st = _text_len(cfg, S)
+    spec = {"tokens": jax.ShapeDtypeStruct((B, st), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        spec["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), dtype
+        )
+    if cfg.is_encoder_decoder:
+        spec["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype)
+    return spec
+
+
+def batch_axes(cfg: ModelConfig, kind: str) -> dict:
+    """Logical sharding axes for every input leaf."""
+    ax = {
+        "tokens": ("batch", "seq"),
+        "targets": ("batch", "seq"),
+        "patch_embeds": ("batch", "seq", "embed"),
+        "enc_embeds": ("batch", "seq", "embed"),
+    }
+    return ax
+
+
+def make_batch(
+    key: jax.Array, cfg: ModelConfig, *, batch: int, seq: int, kind: str = "train"
+) -> dict:
+    """Deterministic synthetic batch (small sizes; CPU tests/examples)."""
+    st = _text_len(cfg, seq)
+    k1, k2, k3 = jax.random.split(key, 3)
+    toks = jax.random.randint(k1, (batch, st + 1), 0, cfg.vocab_size)
+    out = {"tokens": toks[:, :-1]}
+    if kind == "train":
+        out["targets"] = toks[:, 1:]
+    if cfg.frontend == "vision_patches":
+        out["patch_embeds"] = jax.random.normal(
+            k2, (batch, cfg.frontend_tokens, cfg.d_model), F32
+        )
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = jax.random.normal(k3, (batch, seq, cfg.d_model), F32)
+    return out
+
+
+class TokenStream:
+    """Deterministic, restartable, shardable synthetic token pipeline.
+
+    Mimics a production host data loader: each host pulls only its shard
+    of the global batch (by host index), and the stream position is
+    checkpointable (`state()` / `seek()`), which the fault-tolerant
+    training driver relies on for exact restart.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        batch: int,
+        seq: int,
+        *,
+        seed: int = 0,
+        host_index: int = 0,
+        host_count: int = 1,
+    ):
+        assert batch % host_count == 0
+        self.cfg = cfg
+        self.global_batch = batch
+        self.local_batch = batch // host_count
+        self.seq = seq
+        self.seed = seed
+        self.host_index = host_index
+        self.step = 0
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def seek(self, state: dict) -> None:
+        self.step = int(state["step"])
+        assert int(state["seed"]) == self.seed, "stream seed mismatch on restore"
+
+    def next(self) -> dict:
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), self.step),
+            self.host_index,
+        )
+        self.step += 1
+        return make_batch(
+            key, self.cfg, batch=self.local_batch, seq=self.seq, kind="train"
+        )

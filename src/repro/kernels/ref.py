@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every kernel (the source of truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import _sdpa_dense
+from ..models.ssd import ssd_chunked
+
+F32 = jnp.float32
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q (B,Sq,H,hd), k/v (B,Sk,K,hd) with implicit arange positions."""
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    qp = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+    return _sdpa_dense(
+        q, k, v, qp, kp, window if window else None, causal, softcap or None
+    )
+
+
+def decode_attention_ref(q, k, v, pos_ids, lengths, *, window=0, softcap=0.0):
+    """q (B,H,hd) single token; validity from pos_ids/lengths."""
+    out = _sdpa_dense(
+        q[:, None],  # (B,1,H,hd)
+        k,
+        v,
+        lengths[:, None].astype(jnp.int32),
+        pos_ids,
+        window if window else None,
+        True,
+        softcap or None,
+    )
+    return out[:, 0]
+
+
+def ssd_scan_ref(x, dt, A, B_, C_, *, chunk=128, h0=None):
+    """Delegates to the model's chunked SSD (itself validated against the
+    naive sequential recurrence in tests)."""
+    return ssd_chunked(x, dt, A, B_, C_, chunk, h0=h0)
+
+
+def ssd_sequential_ref(x, dt, A, B_, C_):
+    """O(S) literal recurrence — the ground truth for ssd_chunked itself."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    h = jnp.zeros((Bsz, H, P, N), F32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        dA = jnp.exp(dtt.astype(F32) * A.astype(F32))  # (B,H)
+        h = h * dA[..., None, None] + dtt[..., None, None].astype(F32) * (
+            xt[..., :, None].astype(F32) * Bt[..., None, :].astype(F32)
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct.astype(F32))
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(B_, 1, 0),
+        jnp.moveaxis(C_, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,136 @@
+"""Mamba2 SSD chunked scan for TPU.
+
+Grid = (batch, head, chunk) with the chunk axis innermost: the running
+inter-chunk state (P x N, f32) lives in VMEM scratch and is carried
+across sequential grid steps — the TPU-native replacement for the GPU
+kernel's warp-level chunk pipeline. Per chunk the intra-chunk quadratic
+term is two (Q,N)x(N,Q) / (Q,Q)x(Q,P) MXU matmuls; Q=128 keeps every
+matmul dim hardware-aligned.
+
+Layouts (head-major so one program owns one head's sequence):
+  x   (B, H, nc, Q, P)   dtA (B, H, nc, Q)   dt (B, H, nc, Q)
+  B_  (B, H, nc, Q, N)   C_  (B, H, nc, Q, N)
+Outputs: y (B, H, nc, Q, P), final state (B, H, P, N) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, 1, Q, P)
+    dta_ref,  # (1, 1, 1, Q)
+    dt_ref,  # (1, 1, 1, Q)
+    b_ref,  # (1, 1, 1, Q, N)
+    c_ref,  # (1, 1, 1, Q, N)
+    y_ref,  # (1, 1, 1, Q, P)
+    fs_ref,  # (1, 1, P, N) final state
+    state,  # scratch (P, N) f32
+    *,
+    num_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, 0, 0].astype(F32)  # (Q, P)
+    dta = dta_ref[0, 0, 0].astype(F32)  # (Q,)
+    dt = dt_ref[0, 0, 0].astype(F32)  # (Q,)
+    B_ = b_ref[0, 0, 0].astype(F32)  # (Q, N)
+    C_ = c_ref[0, 0, 0].astype(F32)  # (Q, N)
+
+    cs = jnp.cumsum(dta)  # (Q,) inclusive
+    # intra-chunk: scores[q,k] = C_q . B_k, decay L[q,k] = exp(cs_q - cs_k)
+    scores = jax.lax.dot_general(
+        C_, B_, (((1,), (1,)), ((), ())), preferred_element_type=F32
+    )  # (Q, Q)
+    diff = cs[:, None] - cs[None, :]
+    Q = cs.shape[0]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    )
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    M = scores * L * dt[None, :]
+    y = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )  # (Q, P)
+    # inter-chunk: y += (C * exp(cs)) @ state^T
+    Cw = C_ * jnp.exp(cs)[:, None]
+    y += jax.lax.dot_general(
+        Cw, state[...], (((1,), (1,)), ((), ())), preferred_element_type=F32
+    )
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update: state = exp(cs_last) * state + x^T @ (B * w)
+    w = jnp.exp(cs[-1] - cs) * dt  # (Q,)
+    upd = jax.lax.dot_general(
+        x, B_ * w[:, None], (((0,), (0,)), ((), ())), preferred_element_type=F32
+    )  # (P, N)
+    state[...] = jnp.exp(cs[-1]) * state[...] + upd
+
+    @pl.when(ic == num_chunks - 1)
+    def _final():
+        fs_ref[0, 0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) softplus'ed
+    A: jax.Array,  # (H,) negative
+    B_: jax.Array,  # (B, S, H, N)
+    C_: jax.Array,  # (B, S, H, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc, Q = S // chunk, chunk
+
+    def head_major(t):  # (B,S,H,...) -> (B,H,nc,Q,...)
+        t = jnp.moveaxis(t, 2, 1)  # (B,H,S,...)
+        return t.reshape(t.shape[:2] + (nc, Q) + t.shape[3:])
+
+    xr = head_major(x)
+    dtr = head_major(dt[..., None])[..., 0]  # (B,H,nc,Q)
+    dta = dtr * A[None, :, None, None].astype(F32)
+    Br = head_major(B_)
+    Cr = head_major(C_)
+
+    kernel = functools.partial(_ssd_kernel, num_chunks=nc)
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, Q, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), F32)],
+        interpret=interpret,
+    )(xr, dta, dtr, Br, Cr)
+    y = jnp.moveaxis(y.reshape(B, H, S, P), 1, 2)  # (B,S,H,P)
+    return y, fs

@@ -1,0 +1,234 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init). Only the dry-run forces 512 host devices;
+# tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture × input shape)
+on the production meshes and record memory / cost / collective analyses.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --multi-pod
+
+Per cell this produces results/dryrun/<arch>__<shape>__<mesh>[__variant].json:
+  - memory_analysis of the FULL (scan-rolled) program: per-device bytes,
+    proves the cell fits 16 GiB HBM chips;
+  - collective schedule of the full program;
+  - roofline terms from depth-differencing: two UNROLLED programs at 1 and
+    2 super-layers give exact per-layer FLOPs/bytes/collective-bytes
+    (cost_analysis counts a rolled `while` body once — verified — so the
+    rolled program cannot be used for per-step totals).
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCHS, cells, get_config, get_shape, runnable
+from ..perf.hlo import collective_summary
+from ..perf.hw import V5E, roofline_terms
+from .mesh import make_production_mesh
+from .programs import build_program
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mem_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = [
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ]
+    return {k: int(getattr(ma, k, 0) or 0) for k in keys}
+
+
+def _cost(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def _compile_cell(arch, shape, mesh, *, depth_supers=None, unroll=False, **kw):
+    prog = build_program(arch, shape, mesh, depth_supers=depth_supers, unroll=unroll, **kw)
+    with mesh:
+        lowered = prog.lower()
+        compiled = lowered.compile()
+    return prog, compiled
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, variant: str = "baseline",
+             skip_diff: bool = False, **build_kw) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    cell = get_shape(shape)
+    cfg = get_config(arch)
+    rec: dict = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "chips": chips,
+        "variant": variant,
+        "kind": cell.kind,
+    }
+    ok, why = runnable(arch, cell)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = why
+        return rec
+
+    t0 = time.time()
+    # 1) FULL program: sharding-coherence proof + memory + collective schedule
+    prog, compiled = _compile_cell(arch, shape, mesh, variant=variant, **build_kw)
+    rec["full"] = {
+        "memory": _mem_stats(compiled),
+        "cost_analysis_rolled": _cost(compiled),
+        "collectives": collective_summary(compiled.as_text(), chips),
+        "compile_s": round(time.time() - t0, 1),
+    }
+    hbm = rec["full"]["memory"]
+    per_dev = sum(
+        hbm.get(k, 0)
+        for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes")
+    ) - hbm.get("alias_size_in_bytes", 0)
+    rec["full"]["per_device_bytes_estimate"] = per_dev
+    rec["full"]["fits_hbm"] = bool(per_dev <= V5E.hbm_bytes)
+
+    if skip_diff:
+        rec["status"] = "ok"
+        return rec
+
+    # 2) depth differencing with unrolled scans: accurate per-step totals.
+    # microbatches=1 here: totals are scheduling-invariant, and a rolled
+    # microbatch loop would be counted once by cost_analysis.
+    t1 = time.time()
+    _, c1 = _compile_cell(arch, shape, mesh, depth_supers=1, unroll=True,
+                          variant=variant, microbatches=1, **build_kw)
+    _, c2 = _compile_cell(arch, shape, mesh, depth_supers=2, unroll=True,
+                          variant=variant, microbatches=1, **build_kw)
+    model = prog.model
+    n_super = model.n_super
+    f1, f2 = _cost(c1), _cost(c2)
+    w1 = collective_summary(c1.as_text(), chips)["total_wire_bytes_per_chip"]
+    w2 = collective_summary(c2.as_text(), chips)["total_wire_bytes_per_chip"]
+    per_super = {
+        "flops": f2["flops"] - f1["flops"],
+        "bytes": f2["bytes_accessed"] - f1["bytes_accessed"],
+        "wire": w2 - w1,
+    }
+    residual = {
+        "flops": f1["flops"] - per_super["flops"],
+        "bytes": f1["bytes_accessed"] - per_super["bytes"],
+        "wire": w1 - per_super["wire"],
+    }
+    # ALL quantities below are PER-CHIP: cost_analysis reports the
+    # post-SPMD per-device program, and collective_summary converts to
+    # per-chip wire bytes.
+    total = {
+        "flops_per_chip": residual["flops"] + n_super * per_super["flops"],
+        "bytes_per_chip": residual["bytes"] + n_super * per_super["bytes"],
+        "wire_per_chip": residual["wire"] + n_super * per_super["wire"],
+    }
+    terms = roofline_terms(
+        total["flops_per_chip"], total["bytes_per_chip"], total["wire_per_chip"], chips
+    )
+    # usefulness ratio: MODEL_FLOPS / (chips * per-chip HLO flops), with
+    # MODEL_FLOPS = 6*N_active*tokens (train, fwd+bwd) or 2*N_active*tokens
+    # (inference). Catches remat recompute and replication waste.
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    factor = 6 if cell.kind == "train" else 2
+    model_flops = factor * cfg.active_params() * tokens
+    hlo_flops_global = chips * total["flops_per_chip"]
+    rec["roofline"] = {
+        "per_super": per_super,
+        "residual": residual,
+        "total": total,
+        "terms": terms,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": model_flops / hlo_flops_global if hlo_flops_global else 0.0,
+        "diff_compile_s": round(time.time() - t1, 1),
+    }
+    rec["status"] = "ok"
+    return rec
+
+
+def out_path(arch: str, shape: str, mesh_name: str, variant: str) -> Path:
+    v = "" if variant == "baseline" else f"__{variant}"
+    return RESULTS / f"{arch}__{shape}__{mesh_name}{v}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-diff", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    if args.all:
+        todo = list(cells())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, get_shape(args.shape))]
+    meshes = [True, False] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    failures = 0
+    for arch, cell in todo:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            path = out_path(arch, cell.name, mesh_name, args.variant)
+            if path.exists() and not args.force:
+                print(f"cached   {path.name}")
+                continue
+            t0 = time.time()
+            try:
+                rec = run_cell(
+                    arch, cell.name, multi_pod=mp, variant=args.variant,
+                    skip_diff=args.skip_diff,
+                )
+            except Exception as e:  # noqa: BLE001 - record and continue
+                rec = {
+                    "arch": arch, "shape": cell.name, "mesh": mesh_name,
+                    "variant": args.variant, "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                failures += 1
+            path.write_text(json.dumps(rec, indent=1))
+            status = rec.get("status")
+            extra = ""
+            if status == "ok" and "roofline" in rec:
+                t = rec["roofline"]["terms"]
+                extra = (
+                    f" step={t['step_s']*1e3:.2f}ms bottleneck={t['bottleneck']}"
+                    f" useful={rec['roofline']['useful_ratio']:.2f}"
+                )
+            print(
+                f"{status:8s} {arch} {cell.name} {mesh_name}"
+                f" ({time.time()-t0:.0f}s){extra}",
+                flush=True,
+            )
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+"""Cell program builder: (arch × shape × mesh) -> jittable step + shardings.
+
+Single source of truth used by the multi-pod dry-run, the roofline
+analysis, the benchmarks, and the SLA cost model. A "variant" selects the
+sharding/remat strategy so the §Perf hillclimb can A/B strategies without
+touching model code.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_shape
+from ..data.batches import batch_axes, prefill_specs, train_specs
+from ..models.config import ModelConfig, ShapeCell
+from ..models.transformer import LM
+from ..optim.adamw import OptConfig
+from ..parallel.sharding import (
+    Rules,
+    rules_for,
+    sharding_ctx,
+    tree_shardings,
+)
+from ..training import step as training_step
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+@dataclass
+class CellProgram:
+    arch: str
+    cell: ShapeCell
+    kind: str  # train | prefill | decode
+    fn: Callable
+    in_specs: tuple
+    in_shardings: tuple
+    donate_argnums: tuple
+    mesh: jax.sharding.Mesh
+    rules: Rules
+    cfg: ModelConfig
+    model: LM
+    meta: dict = field(default_factory=dict)
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.in_specs)
+
+
+def _scaled_cfg(cfg: ModelConfig, depth_supers: Optional[int], period: int, n_super: int):
+    """Scale depth to `depth_supers` super-layers (roofline differencing)."""
+    if depth_supers is None:
+        return cfg
+    kw = {"num_layers": period * depth_supers}
+    if cfg.is_encoder_decoder:
+        enc_per_super = max(1, cfg.num_encoder_layers // n_super)
+        kw["num_encoder_layers"] = enc_per_super * depth_supers
+    return cfg.replace(**kw)
+
+
+def _data_shards(mesh: jax.sharding.Mesh, rules: Rules) -> int:
+    ax = rules.get("batch")
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def default_microbatches(cfg: ModelConfig, cell: ShapeCell, mesh, rules) -> int:
+    """Smallest power-of-two microbatch count keeping per-device remat
+    residuals (L x B_local x S x D x 2B) under ~2 GiB. Capped so each
+    microbatch still spans every data shard."""
+    shards = _data_shards(mesh, rules)
+    local_b = max(1, cell.global_batch // shards)
+    resid = cfg.num_layers * local_b * cell.seq_len * cfg.d_model * 2
+    mb, cap = 1, max(1, cell.global_batch // shards)
+    while resid / mb > 2 * 2**30 and mb < cap:
+        mb *= 2
+    return mb
+
+
+#: named §Perf variants -> build_program overrides
+def _serve_fsdp_rules(kind: str, multi_pod: bool) -> Rules:
+    r = dict(rules_for(kind, multi_pod=multi_pod))
+    r["fsdp"] = "data"  # ZeRO-style weight sharding for big-model serving
+    return r
+
+
+def _kvseq_rules(kind: str, multi_pod: bool) -> Rules:
+    r = dict(rules_for(kind, multi_pod=multi_pod))
+    # flash-decode: KV sequence sharded over "model"; kv_heads/head_dim
+    # replicated -> no q-vs-kv layout mismatch, softmax stats all-reduce
+    # is (B,H,1)-tiny
+    r["kv_seq"] = "model"
+    r["kv_heads"] = None
+    r["head_dim"] = None
+    r["kv_param_hd"] = None
+    return r
+
+
+def _long_tp_rules(kind: str, multi_pod: bool) -> Rules:
+    r = dict(rules_for(kind, multi_pod=multi_pod))
+    r["fsdp"] = None  # weights TP-only: no per-token ZeRO gathers
+    return r
+
+
+def _cshard_rules(kind: str, multi_pod: bool) -> Rules:
+    r = dict(rules_for(kind, multi_pod=multi_pod))
+    r["capacity"] = "model"
+    r["moe_ff"] = None
+    return r
+
+
+VARIANTS: dict[str, dict] = {
+    "remat_dots": {"remat": "dots"},
+    "remat_none": {"remat": None},
+    # shard MoE expert compute on capacity rows; expert weights replicate
+    # over model (still FSDP over data) -> no row-parallel all-reduce
+    "moe_cshard": {"rules_fn": _cshard_rules},
+    "moe_cshard_dots": {"rules_fn": _cshard_rules, "remat": "dots"},
+    "dots_mb2": {"remat": "dots", "microbatches": 2},
+    "dots_mb4": {"remat": "dots", "microbatches": 4},
+    # save only all-reduced sublayer outputs (tagged "coll_out")
+    "remat_coll": {"remat": "coll"},
+    "coll_mb16": {"remat": "coll", "microbatches": 16},
+    "serve_fsdp": {"rules_fn": _serve_fsdp_rules},
+    "long_tp": {"rules_fn": _long_tp_rules},
+    # int8 KV cache: halves decode's dominant HBM stream
+    "kv_int8": {"kv_quant": True},
+    # sequence-sharded KV decode (flash-decode over the model axis)
+    "decode_kvseq": {"rules_fn": _kvseq_rules},
+    "decode_kvseq_int8": {"rules_fn": _kvseq_rules, "kv_quant": True},
+    # big-model prefill: ZeRO weights + sequential batch chunks
+    # (pmb=2 keeps each chunk's batch >= the 16-way data axis)
+    "big_serve": {"rules_fn": _serve_fsdp_rules, "prefill_microbatches": 2},
+}
+
+
+def build_program(
+    arch: str,
+    shape: str,
+    mesh: jax.sharding.Mesh,
+    *,
+    reduced: bool = False,
+    depth_supers: Optional[int] = None,
+    unroll: bool = False,
+    variant: str = "baseline",
+    microbatches: Optional[int] = None,
+    remat: Optional[str] = "full",
+    rules_override: Optional[Rules] = None,
+    prefill_microbatches: int = 1,
+    kv_quant: bool = False,
+) -> CellProgram:
+    if variant in VARIANTS:
+        for k, v in VARIANTS[variant].items():
+            if k == "remat":
+                remat = v
+            elif k == "microbatches" and microbatches is None:
+                # explicit caller values win (the roofline differencing
+                # passes microbatches=1: totals are schedule-invariant)
+                microbatches = v
+            elif k == "prefill_microbatches":
+                prefill_microbatches = v
+            elif k == "kv_quant":
+                kv_quant = v
+            elif k == "rules":
+                rules_override = v
+    cell = get_shape(shape)
+    cfg0 = get_config(arch, reduced=reduced)
+    probe = LM(cfg0)  # for period/n_super before scaling
+    cfg = _scaled_cfg(cfg0, depth_supers, probe.period, probe.n_super)
+    model = LM(cfg, scan_unroll=unroll, kv_quant=kv_quant)
+
+    multi_pod = "pod" in mesh.axis_names
+    rule_kind = "long" if cell.name == "long_500k" else cell.kind
+    if variant in VARIANTS and "rules_fn" in VARIANTS[variant]:
+        rules_override = VARIANTS[variant]["rules_fn"](rule_kind, multi_pod)
+    rules = rules_override or rules_for(rule_kind, multi_pod=multi_pod)
+    meta = {"variant": variant, "multi_pod": multi_pod, "rule_kind": rule_kind}
+
+    if cell.kind == "train":
+        st_specs = training_step.state_specs(model)
+        st_axes = training_step.state_axes(model)
+        st_sh = tree_shardings(st_axes, st_specs, rules, mesh)
+        b_specs = train_specs(cfg, cell, dtype=BF16)
+        b_ax = batch_axes(cfg, "train")
+        b_sh = {
+            k: tree_shardings(b_ax[k], v, rules, mesh) for k, v in b_specs.items()
+        }
+        opt_cfg = OptConfig()
+        if microbatches is None:
+            microbatches = default_microbatches(cfg, cell, mesh, rules)
+        meta["microbatches"] = microbatches
+        step_fn = training_step.make_train_step(
+            model, opt_cfg, microbatches=microbatches, remat=remat
+        )
+
+        def fn(state, batch):
+            with sharding_ctx(mesh, rules):
+                return step_fn(state, batch)
+
+        return CellProgram(
+            arch, cell, "train", fn,
+            in_specs=(st_specs, b_specs),
+            in_shardings=(st_sh, b_sh),
+            donate_argnums=(0,),
+            mesh=mesh, rules=rules, cfg=cfg, model=model, meta=meta,
+        )
+
+    # --- serving ---
+    p_specs = model.param_shapes(BF16)
+    p_ax = model.param_axes()
+    p_sh = tree_shardings(p_ax, p_specs, rules, mesh)
+
+    if cell.kind == "prefill":
+        b_specs = prefill_specs(cfg, cell, dtype=BF16)
+        b_ax = batch_axes(cfg, "prefill")
+        b_sh = {
+            k: tree_shardings(b_ax[k], v, rules, mesh) for k, v in b_specs.items()
+        }
+        pmb = prefill_microbatches
+        meta["prefill_microbatches"] = pmb
+
+        def _prefill_one(params, batch):
+            return model.prefill(
+                params,
+                batch["tokens"],
+                frontend_embeds=batch.get("patch_embeds"),
+                enc_embeds=batch.get("enc_embeds"),
+            )
+
+        def fn(params, batch):
+            with sharding_ctx(mesh, rules):
+                if pmb <= 1:
+                    return _prefill_one(params, batch)
+                # sequential batch chunks bound the S=32k activation
+                # live-set (EXPERIMENTS.md SPerf B4). Chunk results are
+                # written in place into the full cache/logits with
+                # dynamic_update_slice (a lax.map + transpose merge was
+                # measured at 91.6 GiB of stacked/copied caches).
+                B = cell.global_batch
+                Bc = B // pmb
+                full_spec = model.cache_spec(
+                    B, cell.seq_len, dtype=BF16,
+                    enc_len=cell.seq_len if cfg.is_encoder_decoder else None,
+                )
+                ax = model.cache_axes(full_spec)
+                full_cache = jax.tree.map(
+                    lambda sd: jnp.full(sd.shape, -1, sd.dtype)
+                    if sd.dtype == jnp.int32
+                    else jnp.zeros(sd.shape, sd.dtype),
+                    full_spec,
+                )
+                full_logits = jnp.zeros((B, cfg.vocab_size), F32)
+
+                def body(i, carry):
+                    logits_acc, cache_acc = carry
+                    chunk = jax.tree.map(
+                        lambda x: jax.lax.dynamic_slice_in_dim(
+                            x, i * Bc, Bc, axis=0
+                        ),
+                        batch,
+                    )
+                    lg, cc = _prefill_one(params, chunk)
+                    logits_acc = jax.lax.dynamic_update_slice_in_dim(
+                        logits_acc, lg.astype(F32), i * Bc, axis=0
+                    )
+
+                    def put(axes, big, small):
+                        bpos = list(axes).index("batch")
+                        return jax.lax.dynamic_update_slice_in_dim(
+                            big, small, i * Bc, axis=bpos
+                        )
+
+                    cache_acc = jax.tree.map(
+                        put, ax, cache_acc, cc,
+                        is_leaf=lambda a: isinstance(a, tuple),
+                    )
+                    return logits_acc, cache_acc
+
+                logits, cache = jax.lax.fori_loop(
+                    0, pmb, body, (full_logits, full_cache)
+                )
+                return logits, cache
+
+        return CellProgram(
+            arch, cell, "prefill", fn,
+            in_specs=(p_specs, b_specs),
+            in_shardings=(p_sh, b_sh),
+            donate_argnums=(),
+            mesh=mesh, rules=rules, cfg=cfg, model=model, meta=meta,
+        )
+
+    # decode: one new token against a kv_len context
+    B = cell.global_batch
+    c_specs = model.cache_spec(
+        B, cell.seq_len, dtype=BF16,
+        enc_len=cell.seq_len if cfg.is_encoder_decoder else None,
+    )
+    c_ax = model.cache_axes(c_specs)
+    c_sh = tree_shardings(c_ax, c_specs, rules, mesh)
+    t_spec = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t_sh = tree_shardings(("batch", "seq"), t_spec, rules, mesh)
+
+    def fn(params, cache, tokens):
+        with sharding_ctx(mesh, rules):
+            return model.decode_step(params, cache, tokens)
+
+    return CellProgram(
+        arch, cell, "decode", fn,
+        in_specs=(p_specs, c_specs, t_spec),
+        in_shardings=(p_sh, c_sh, t_sh),
+        donate_argnums=(1,),
+        mesh=mesh, rules=rules, cfg=cfg, model=model, meta=meta,
+    )

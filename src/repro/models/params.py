@@ -1,0 +1,85 @@
+"""Declarative parameters: one declaration drives init, logical axes, and
+shape inspection (for dry-run ShapeDtypeStructs) without duplication.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | constant
+    fan_in: Optional[int] = None  # scale = 1/sqrt(fan_in); default shape[0]
+    constant: float = 0.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+DeclTree = dict  # nested dict[str, ParamDecl | DeclTree]
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def init_param(key: jax.Array, d: ParamDecl, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "constant":
+        return jnp.full(d.shape, d.constant, dtype)
+    fan_in = d.fan_in if d.fan_in is not None else (d.shape[0] if d.shape else 1)
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_tree(key: jax.Array, decls: DeclTree, dtype) -> dict:
+    """Initialize a params pytree from a declaration tree."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+    inited = [init_param(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, inited)
+
+
+def axes_tree(decls: DeclTree) -> dict:
+    return jax.tree.map(lambda d: d.axes, decls, is_leaf=_is_decl)
+
+
+def shape_tree(decls: DeclTree, dtype) -> dict:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), decls, is_leaf=_is_decl
+    )
+
+
+def stacked(decls: DeclTree, n: int) -> DeclTree:
+    """Add a leading layer axis (logical name "layers" -> replicated)."""
+
+    def one(d: ParamDecl) -> ParamDecl:
+        return ParamDecl(
+            (n,) + d.shape, ("layers",) + d.axes, d.init, d.fan_in, d.constant
+        )
+
+    return jax.tree.map(one, decls, is_leaf=_is_decl)
+
+
+def init_stacked(key: jax.Array, decls: DeclTree, n: int, dtype) -> dict:
+    """Init n stacked copies with independent keys (vmapped)."""
+    keys = jax.random.split(key, n)
+
+    def init_one(k):
+        return init_tree(k, decls, dtype)
+
+    return jax.vmap(init_one)(keys)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

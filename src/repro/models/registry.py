@@ -1,0 +1,9 @@
+"""Build model objects from configs."""
+from __future__ import annotations
+
+from .config import ModelConfig
+from .transformer import LM
+
+
+def build_model(cfg: ModelConfig, impl: str = "jnp") -> LM:
+    return LM(cfg, impl=impl)

@@ -1,0 +1,222 @@
+"""Mamba2 state-space duality (SSD) — chunked reference + decode recurrence.
+
+Implements the SSD algorithm from "Transformers are SSMs" (arXiv:2405.21060):
+the sequence is split into chunks; within a chunk the recurrence is computed
+as a masked, decay-weighted attention-like quadratic form; chunk states are
+carried by a scan. A Pallas TPU kernel (kernels/ssd_scan.py) implements the
+same chunking with VMEM tiles; this jnp version is its oracle and the
+lowering path for the CPU dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .config import ModelConfig
+from .params import ParamDecl
+
+F32 = jnp.float32
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) positive step sizes
+    A: jax.Array,  # (H,) negative continuous-time decay
+    B_: jax.Array,  # (B, S, H, N) input matrix (already head-expanded)
+    C_: jax.Array,  # (B, S, H, N) output matrix (already head-expanded)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, final_state): y (B,S,H,P), state (B,H,P,N)."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc, Q = S // chunk, chunk
+
+    # chunk-serial scan (the Pallas kernel's schedule, in jnp): only ONE
+    # chunk's (B,Q,Q,H) quadratic tensors are live at a time — the fully
+    # vectorized form materialized (B,nc,Q,Q,H) f32 several times over
+    # (~17 GiB/device on jamba prefill_32k; see EXPERIMENTS.md §Perf B2)
+    xr = jnp.moveaxis(x.reshape(Bsz, nc, Q, H, P), 1, 0).astype(F32)
+    dtr = jnp.moveaxis(dt.reshape(Bsz, nc, Q, H), 1, 0).astype(F32)
+    Br = jnp.moveaxis(B_.reshape(Bsz, nc, Q, H, N), 1, 0).astype(F32)
+    Cr = jnp.moveaxis(C_.reshape(Bsz, nc, Q, H, N), 1, 0).astype(F32)
+    Af = A.astype(F32)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), F32)
+
+    def step(h, inp):
+        x_c, dt_c, B_c, C_c = inp  # (B,Q,H,*)
+        dtA = dt_c * Af  # (B,Q,H), negative
+        cs = jnp.cumsum(dtA, axis=1)  # inclusive
+        # intra: L[q,k] = exp(cs_q - cs_k), q >= k
+        diff = cs[:, :, None, :] - cs[:, None, :, :]  # (B,Q,K,H)
+        L = jnp.where(tri, jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", C_c, B_c)
+        M = scores * L * dt_c[:, None, :, :]
+        y = jnp.einsum("bqkh,bkhp->bqhp", M, x_c)
+        # inter: contribution of the carried state
+        y += jnp.einsum("bqhn,bhpn->bqhp", C_c * jnp.exp(cs)[..., None], h)
+        # chunk summary -> next state
+        cs_last = cs[:, -1:, :]
+        w = jnp.exp(cs_last - cs) * dt_c  # (B,Q,H)
+        state_c = jnp.einsum("bqh,bqhp,bqhn->bhpn", w, x_c, B_c)
+        h_next = jnp.exp(cs_last[:, 0, :])[:, :, None, None] * h + state_c
+        return h_next, y
+
+    h_final, ys = jax.lax.scan(
+        jax.checkpoint(step, prevent_cse=False), h0, (xr, dtr, Br, Cr)
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    h: jax.Array,  # (B, H, P, N)
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H)
+    A: jax.Array,  # (H,)
+    B_: jax.Array,  # (B, H, N)
+    C_: jax.Array,  # (B, H, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. Returns (y (B,H,P), new state)."""
+    hf = h.astype(F32)
+    dA = jnp.exp(dt.astype(F32) * A.astype(F32))  # (B,H)
+    upd = dt.astype(F32)[:, :, None, None] * jnp.einsum(
+        "bhp,bhn->bhpn", x.astype(F32), B_.astype(F32)
+    )
+    h_new = dA[:, :, None, None] * hf + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, C_.astype(F32))
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer layer (projections + conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+
+def mamba_decl(cfg: ModelConfig) -> dict:
+    d, di, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, W = cfg.ssm_heads, cfg.conv_width
+    conv_ch = di + 2 * ns  # x, B, C channels (single group)
+    return {
+        "in_proj": ParamDecl((d, 2 * di + 2 * ns + nh), ("fsdp", "ssm_inner"), fan_in=d),
+        "conv_w": ParamDecl((W, conv_ch), (None, "conv_ch"), fan_in=W),
+        "conv_b": ParamDecl((conv_ch,), ("conv_ch",), init="zeros"),
+        "A_log": ParamDecl((nh,), ("ssm_heads",), init="zeros"),  # A = -1
+        "D": ParamDecl((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDecl((nh,), ("ssm_heads",), init="zeros"),
+        "norm_w": ParamDecl((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDecl((di, d), ("ssm_inner", "fsdp"), fan_in=di),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    S = u.shape[1]
+    out = sum(up[:, i : i + S, :] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di : 2 * di]
+    B_ = zxbcdt[..., 2 * di : 2 * di + ns]
+    C_ = zxbcdt[..., 2 * di + ns : 2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns :]
+    return z, xs, B_, C_, dt
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,  # {"ssm": (B,H,P,N), "conv": (B,W-1,conv_ch)}
+    want_cache: bool = False,
+    impl: str = "jnp",
+):
+    """Mamba2 mixer. Prefill/train when cache is None or want_cache;
+    single-step decode when cache holds state and S == 1."""
+    Bsz, S, D = x.shape
+    dt_ = x.dtype
+    di, ns, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    W = cfg.conv_width
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    zxbcdt = shard(zxbcdt, "batch", "seq", "ssm_inner")
+    z, xs, B_, C_, dtr = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)  # (B,S,conv_ch)
+
+    decode = cache is not None and "ssm" in cache and S == 1
+    if decode:
+        full = jnp.concatenate([cache["conv"].astype(dt_), conv_in], axis=1)
+        conv_out = jnp.einsum(
+            "bwc,wc->bc", full.astype(F32), p["conv_w"].astype(F32)
+        ) + p["conv_b"].astype(F32)
+        conv_out = conv_out[:, None, :].astype(dt_)
+        new_conv = full[:, 1:, :]
+    else:
+        conv_out = _causal_conv(conv_in, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+        new_conv = conv_in[:, -(W - 1) :, :] if want_cache else None
+    conv_out = jax.nn.silu(conv_out)
+
+    xs_c = conv_out[..., :di].reshape(Bsz, S, nh, P)
+    B_c = conv_out[..., di : di + ns]  # (B,S,N) single group
+    C_c = conv_out[..., di + ns :]
+    Bh = jnp.broadcast_to(B_c[:, :, None, :], (Bsz, S, nh, ns))
+    Ch = jnp.broadcast_to(C_c[:, :, None, :], (Bsz, S, nh, ns))
+    dt_act = jax.nn.softplus(dtr.astype(F32) + p["dt_bias"].astype(F32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(F32))  # (H,)
+
+    if decode:
+        h0 = cache["ssm"]
+        y1, h_new = ssd_decode_step(
+            h0, xs_c[:, 0], dt_act[:, 0], A, Bh[:, 0], Ch[:, 0]
+        )
+        y = y1[:, None]  # (B,1,H,P)
+        new_cache = {"ssm": h_new, "conv": new_conv}
+    else:
+        h0 = cache["ssm"] if (cache is not None and "ssm" in cache) else None
+        chunk = min(cfg.ssm_chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            # right-pad with dt=0: exp(0)=1 leaves the state untouched and
+            # padded outputs are dropped below
+            xp = jnp.pad(xs_c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bp = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cp = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dt_act, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xp, Bp, Cp, dtp = xs_c, Bh, Ch, dt_act
+        y, h_new = ssd_chunked(xp, dtp, A, Bp, Cp, chunk, h0=h0)
+        if pad:
+            y = y[:, :S]
+        new_cache = {"ssm": h_new, "conv": new_conv} if want_cache else None
+
+    y = y + xs_c * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    # gated RMSNorm (mamba2's norm-before-gate variant)
+    yf = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = (p["norm_w"].astype(F32) * yf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", yn, p["out_proj"].astype(dt_))
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def mamba_cache_decl(cfg: ModelConfig, batch: int, dtype) -> dict:
+    """ShapeDtypeStructs for one layer's mamba cache."""
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), F32
+        ),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }

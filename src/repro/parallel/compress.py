@@ -1,0 +1,67 @@
+"""Int8 error-feedback gradient compression for data-parallel reduction.
+
+The compressed reduction transmits int8 shards (visible as ``s8``
+all-gathers in the compiled HLO — the dry-run collective parser verifies
+the 4x wire reduction vs f32), dequantizes locally, and keeps the
+quantization residual as per-worker error feedback so the scheme is
+unbiased over time (Seide et al. / EF-SGD).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def ef_compress(x: jax.Array, err: jax.Array):
+    """Error-feedback compression of one tensor.
+
+    Returns (q, scale, new_err) with x + err = deq(q, scale) + new_err.
+    """
+    target = x.astype(F32) + err
+    q, scale = quantize_int8(target)
+    new_err = target - dequantize_int8(q, scale)
+    return q, scale, new_err
+
+
+def ef_allreduce_mean(x: jax.Array, err: jax.Array, axis_name: str):
+    """Mean-reduce `x` across `axis_name` inside shard_map, transmitting
+    int8: all-gather(q: s8) + all-gather(scale: f32 scalar), then local
+    dequant-sum. Returns (mean, new_err)."""
+    q, scale, new_err = ef_compress(x, err)
+    qs = jax.lax.all_gather(q, axis_name)  # s8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)
+    n = qs.shape[0]
+    deq = qs.astype(F32) * ss.reshape((n,) + (1,) * x.ndim)
+    return jnp.sum(deq, axis=0) / n, new_err
+
+
+def tree_ef_allreduce_mean(grads, errs, axis_name: str):
+    """Apply ef_allreduce_mean leaf-wise over a gradient pytree."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errs)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        m, ne = ef_allreduce_mean(g, e, axis_name)
+        out_g.append(m.astype(g.dtype))
+        out_e.append(ne)
+    return treedef.unflatten(out_g), treedef.unflatten(out_e)
+
+
+def init_error_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)

@@ -1,0 +1,210 @@
+"""Logical-axis sharding (t5x-style) with divisibility fallback.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", ...). A rules table maps logical names to mesh axes. A logical axis
+whose dimension is not divisible by the mapped mesh-axis size silently
+falls back to replication for that axis — this is what lets e.g.
+gemma2-2b (8 heads) lower on a 16-way "model" axis without manual
+special-casing, while granite (32 heads) gets full tensor parallelism.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, None]
+Rules = dict[str, Union[str, tuple[str, ...], None]]
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+#: Default rules for a ("data", "model") mesh; the "pod" axis (if present)
+#: is prepended to the batch/fsdp mapping by `with_pod_axis`.
+TRAIN_RULES: Rules = {
+    "batch": "data",
+    "seq": None,
+    "embed": None,
+    "fsdp": "data",          # FSDP shards a params dim over the data axis
+    "heads": "model",
+    "kv_heads": "model",
+    # fallback TP axis: claims "model" only when heads/kv_heads could not
+    # (e.g. gemma2's 8q/4kv heads or qwen2's 14q/2kv on a 16-way axis).
+    # Safe because rope uses interleaved pairing (layers.apply_rope).
+    "head_dim": "model",
+    # ACTIVATION-only attention axes. Default None: forcing q/k/v activation
+    # layouts was measured to fight GSPMD's partial kv-head sharding and
+    # trigger "involuntary full rematerialization" (full-batch K/V
+    # all-gathers, 2x4GiB/layer on mixtral train) — see EXPERIMENTS.md
+    # SPerf. Params keep their own (heads/head_dim) mappings above.
+    "act_heads": "model",
+    "act_kv_heads": None,
+    "act_head_dim": None,
+    # PARAM fallbacks: q weights may claim "model" on head_dim when heads
+    # cannot (gemma2/qwen2). KV weights must NOT (measured: hd-sharded K
+    # conflicts with GSPMD's partial kv-head sharding of the GQA reshape
+    # and replicates K/V over the full batch). The KV *cache* still
+    # hd-shards via "head_dim" (cache_axes) — that is where gemma2's
+    # decode 54.8->4.1 GiB win came from.
+    "q_param_hd": "model",
+    "kv_param_hd": None,
+    "qkv": "model",          # fused q/k/v head-ish output dims
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",      # expert parallelism
+    "expert_group": None,
+    "moe_ff": "model",       # MoE hidden dim (TP-MoE when EP impossible)
+    "capacity": None,        # alt: shard expert capacity rows (moe_cshard)
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv_ch": "model",
+    "kv_seq": None,
+}
+
+SERVE_RULES: Rules = dict(
+    TRAIN_RULES,
+    fsdp=None,               # serving keeps whole (bf16) weights per TP group
+    batch="data",
+)
+
+#: long-context decode: batch=1 ⇒ the data axis is idle for activations,
+#: so shard the KV/state sequence dim over it AND ZeRO-style shard the
+#: bf16 weights over it too (they are streamed anyway at batch=1).
+LONG_RULES: Rules = dict(
+    SERVE_RULES,
+    batch=None,
+    kv_seq="data",
+    fsdp="data",
+)
+
+
+def with_pod_axis(rules: Rules) -> Rules:
+    """Extend a single-pod rules table to the ("pod","data","model") mesh."""
+    r = dict(rules)
+    for k, v in r.items():
+        if v == "data" and k in ("batch",):
+            r[k] = ("pod", "data")
+    return r
+
+
+def rules_for(shape_kind: str, *, multi_pod: bool) -> Rules:
+    base = {
+        "train": TRAIN_RULES,
+        "prefill": SERVE_RULES,
+        "decode": SERVE_RULES,
+        "long": LONG_RULES,
+    }[shape_kind]
+    return with_pod_axis(base) if multi_pod else base
+
+
+# ---------------------------------------------------------------------------
+# Context: the active (mesh, rules) pair used by model-internal constraints
+# ---------------------------------------------------------------------------
+
+class _ShardingCtx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Rules] = None
+
+
+_CTX = _ShardingCtx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[Rules]):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+# ---------------------------------------------------------------------------
+# Spec construction with divisibility fallback
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, axis: Union[str, tuple[str, ...]]) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    rules: Rules,
+    mesh: Mesh,
+) -> P:
+    """Map logical axes to a PartitionSpec, dropping non-divisible axes.
+
+    A mesh axis may appear at most once in a PartitionSpec; when two
+    logical dims map to the same mesh axis the earlier dim wins.
+    """
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set[str] = set()
+    out: list[Union[str, tuple[str, ...], None]] = []
+    for dim, name in zip(shape, logical_axes):
+        mesh_axis = rules.get(name) if name else None
+        if mesh_axis is None:
+            out.append(None)
+            continue
+        axes = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        kept = tuple(a for a in axes if a not in used)
+        if not kept:
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, kept) != 0:
+            # partial fallback: try the largest divisible prefix
+            while kept and dim % _axis_size(mesh, kept) != 0:
+                kept = kept[:-1]
+            if not kept:
+                out.append(None)
+                continue
+        used.update(kept)
+        out.append(kept if len(kept) > 1 else kept[0])
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain an activation to the current (mesh, rules) context.
+
+    No-op outside a sharding context (e.g. single-device smoke tests).
+    """
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return x
+    spec = spec_for(x.shape, logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(axes_tree, shapes_tree, rules: Rules, mesh: Mesh):
+    """NamedShardings for a params pytree given its logical-axes pytree."""
+
+    def one(axes, shaped):
+        return NamedSharding(mesh, spec_for(shaped.shape, axes, rules, mesh))
+
+    return jax.tree.map(
+        one, axes_tree, shapes_tree, is_leaf=lambda a: isinstance(a, tuple)
+    )
+
+
+def tree_specs(axes_tree, shapes_tree, rules: Rules, mesh: Mesh):
+    def one(axes, shaped):
+        return spec_for(shaped.shape, axes, rules, mesh)
+
+    return jax.tree.map(
+        one, axes_tree, shapes_tree, is_leaf=lambda a: isinstance(a, tuple)
+    )

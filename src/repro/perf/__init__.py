@@ -1,0 +1,2 @@
+from .hlo import collective_summary, parse_collectives
+from .hw import V5E, HwSpec, roofline_terms

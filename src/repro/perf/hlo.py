@@ -1,0 +1,127 @@
+"""Parse collective traffic out of post-SPMD compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so the roofline
+collective term comes from here: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction is matched,
+its per-partition result shape and replica-group size are parsed, and
+converted to per-chip wire bytes with ring formulas:
+
+  all-reduce      2 (N-1)/N * bytes      (reduce-scatter + all-gather phases)
+  all-gather      (N-1)/N   * result     (result is the gathered shape)
+  reduce-scatter  (N-1)     * result     (operand = N * result)
+  all-to-all      (N-1)/N   * bytes
+  collective-permute       1 * bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|[a-z0-9_]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class Collective:
+    op: str
+    bytes_out: float  # per-partition result bytes
+    group_size: int
+    wire_bytes: float  # per-chip wire bytes
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Sum byte sizes of all array shapes in a (possibly tuple) type."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _last_shape_bytes(type_str: str) -> float:
+    """Bytes of the last array shape (the destination buffer of -start ops)."""
+    matches = _SHAPE_RE.findall(type_str)
+    if not matches:
+        return 0.0
+    dt, dims = matches[-1]
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return total_devices
+
+
+def _wire_bytes(op: str, out_bytes: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2 * (n - 1) / n * out_bytes
+    if op == "all-gather":
+        return (n - 1) / n * out_bytes
+    if op == "reduce-scatter":
+        return (n - 1) * out_bytes
+    if op == "all-to-all":
+        return (n - 1) / n * out_bytes
+    if op == "collective-permute":
+        return out_bytes
+    return 0.0
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> list[Collective]:
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        rtype = m.group("rtype")
+        if m.group("start"):
+            b = _last_shape_bytes(rtype)
+        else:
+            b = _shape_bytes(rtype)
+        n = _group_size(line, total_devices)
+        out.append(Collective(op, b, n, _wire_bytes(op, b, n)))
+    return out
+
+
+def collective_summary(hlo_text: str, total_devices: int) -> dict:
+    colls = parse_collectives(hlo_text, total_devices)
+    by_op: dict[str, dict] = {}
+    for c in colls:
+        d = by_op.setdefault(c.op, {"count": 0, "wire_bytes": 0.0, "out_bytes": 0.0})
+        d["count"] += 1
+        d["wire_bytes"] += c.wire_bytes
+        d["out_bytes"] += c.bytes_out
+    return {
+        "total_wire_bytes_per_chip": sum(c.wire_bytes for c in colls),
+        "count": len(colls),
+        "by_op": by_op,
+    }

@@ -1,0 +1,48 @@
+"""TPU v5e hardware model (the TARGET; this container only lowers)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12  # FLOP/s per chip
+    hbm_bandwidth: float = 819e9  # B/s per chip
+    ici_link_bandwidth: float = 50e9  # B/s per link
+    hbm_bytes: int = 16 * 1024**3  # 16 GiB per chip
+    vmem_bytes: int = 128 * 1024**2  # ~128 MiB VMEM
+    # pricing for the SLA cost model (core/billing.py); unit: $/chip-hour.
+    # Ratio mirrors the paper's spot-VM vs cloud-function gap (9-24x, §4.3).
+    reserved_price: float = 1.2
+    elastic_price_multiplier: float = 10.0
+
+
+V5E = HwSpec()
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    hbm_bytes_per_chip: float,
+    wire_bytes_per_chip: float,
+    chips: int,
+    hw: HwSpec = V5E,
+) -> dict:
+    """The three roofline terms in seconds.
+
+    All inputs are PER-CHIP: ``compiled.cost_analysis()`` reports the
+    post-SPMD per-device program (verified empirically), and the HLO
+    collective parser converts to per-chip wire bytes. Equivalent to the
+    global formulation HLO_FLOPs_global / (chips * peak) with
+    HLO_FLOPs_global = chips * per-chip.
+    """
+    compute = flops_per_chip / hw.peak_flops_bf16
+    memory = hbm_bytes_per_chip / hw.hbm_bandwidth
+    collective = wire_bytes_per_chip / hw.ici_link_bandwidth
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["step_s"] = max(compute, memory, collective)
+    terms["bottleneck"] = max(
+        ("compute_s", compute), ("memory_s", memory), ("collective_s", collective),
+        key=lambda kv: kv[1],
+    )[0].replace("_s", "")
+    return terms

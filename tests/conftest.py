@@ -1,0 +1,13 @@
+import os
+import sys
+from pathlib import Path
+
+# tests must see ONE device (only dryrun.py forces 512); keep any
+# inherited flag out of the test environment.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,158 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Policy, Query, QueryWork, ServiceLevel, run_sim
+from repro.core.cost_model import CostModel
+from repro.parallel.compress import dequantize_int8, ef_compress, quantize_int8
+from repro.parallel.sharding import TRAIN_RULES, spec_for
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2, max_size=64))
+def test_ef_identity_invariant(vals):
+    """x + err == deq(q) + new_err (error feedback loses nothing)."""
+    x = jnp.asarray(vals, jnp.float32)
+    err = jnp.zeros_like(x)
+    q, scale, new_err = ef_compress(x, err)
+    lhs = np.asarray(x + err)
+    rhs = np.asarray(dequantize_int8(q, scale) + new_err)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5 * (1 + np.abs(lhs).max()))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_ef_error_accumulation_bounded(seed):
+    """Repeated EF compression of the same signal: residual stays bounded
+    by one quantization step (no drift)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (32,))
+    err = jnp.zeros_like(x)
+    for _ in range(10):
+        q, scale, err = ef_compress(x, err)
+        assert float(jnp.max(jnp.abs(err))) <= float(scale) * 1.01
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=32))
+def test_quantize_int8_range_and_scale(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# sharding spec fallback
+# ---------------------------------------------------------------------------
+
+_mesh = None
+
+
+def _get_mesh():
+    global _mesh
+    if _mesh is None:
+        _mesh = jax.make_mesh(
+            (1, 1), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+    return _mesh
+
+
+class _FakeMesh:
+    """Mesh stand-in with arbitrary axis sizes (spec_for only reads shape)."""
+
+    def __init__(self, data, model):
+        self.shape = {"data": data, "model": model}
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 512), min_size=1, max_size=4),
+    data=st.sampled_from([1, 2, 4, 8, 16]),
+    model=st.sampled_from([1, 2, 4, 8, 16]),
+)
+def test_spec_for_always_valid(dims, data, model):
+    """Every produced spec divides dims and never reuses a mesh axis."""
+    names = ["fsdp", "heads", "ff", "vocab"][: len(dims)]
+    mesh = _FakeMesh(data, model)
+    spec = spec_for(tuple(dims), tuple(names), TRAIN_RULES, mesh)
+    used = []
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            assert a not in used, (spec, dims)
+            used.append(a)
+            size *= mesh.shape[a]
+        assert dim % size == 0, (spec, dims)
+
+
+# ---------------------------------------------------------------------------
+# SLA guarantees under random streams
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(5, 40),
+    policy=st.sampled_from([Policy.AUTO, Policy.FORCE]),
+)
+def test_relaxed_pending_guarantee_any_stream(seed, n, policy):
+    """For ANY arrival pattern the relaxed pending time stays <= deadline
+    and every query eventually finishes exactly once."""
+    rng = np.random.default_rng(seed)
+    qs = []
+    for i in range(n):
+        sla = ServiceLevel(int(rng.integers(0, 3)))
+        qs.append(
+            Query(
+                work=QueryWork(
+                    arch="paper-default",
+                    prompt_tokens=int(rng.integers(10_000, 2_000_000)),
+                    output_tokens=int(rng.integers(1, 64)),
+                ),
+                sla=sla,
+                submit_time=float(rng.uniform(0, 600)),
+            )
+        )
+    res = run_sim(qs, policy=policy, use_calibration=False)
+    assert len(res.queries) == n  # everything finishes, nothing duplicated
+    assert len({q.qid for q in res.queries}) == n
+    for q in res.queries:
+        assert q.finish_time is not None
+        assert q.finish_time >= q.start_time >= q.dequeue_time >= q.submit_time
+        if q.effective_sla is ServiceLevel.RELAXED:
+            assert q.pending_time <= 300.0 + 1e-6
+        if q.effective_sla is ServiceLevel.IMMEDIATE:
+            assert q.pending_time == 0.0
+    # billing consistency: every finished query was billed for its work
+    for q in res.queries:
+        assert q.cost > 0 and q.chip_seconds > 0
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    tokens=st.integers(1_000, 5_000_000),
+    chips=st.sampled_from([4, 8, 16, 32, 64, 128]),
+)
+def test_cost_model_positive_and_scale_monotone(tokens, chips):
+    cm = CostModel(use_calibration=False)
+    w = QueryWork(arch="internlm2-1.8b", prompt_tokens=tokens, output_tokens=4)
+    t = cm.exec_time(w, chips)
+    assert t > 0
+    assert cm.exec_time(w, chips * 2) <= t + 1e-12
