@@ -9,6 +9,7 @@ import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import paper, roofline  # noqa: E402
 
@@ -29,6 +30,7 @@ def main() -> None:
     rows7, d7 = _run("fig7_cost", paper.fig7_cost)
     _run("sla_guarantees", paper.sla_guarantees)
     _run("sos_vs_pos_determinism", paper.sos_vs_pos_determinism)
+    _run("stage_engine", paper.stage_engine)
     _run("beyond_paper", paper.beyond_paper)
 
     def _roofline():

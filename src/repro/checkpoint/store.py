@@ -21,13 +21,18 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from pathlib import Path
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:  # optional: zstd when available, zlib otherwise (codec recorded
+    import zstandard  # in the manifest so mixed environments interop)
+except ModuleNotFoundError:
+    zstandard = None
 
 _SEP = "/"
 
@@ -96,8 +101,13 @@ class CheckpointStore:
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
-            manifest = {"step": step, "extra": extra or {}, "leaves": {}}
-            cctx = zstandard.ZstdCompressor(level=3)
+            if zstandard is not None:
+                codec, compress = "zstd", zstandard.ZstdCompressor(level=3).compress
+            else:
+                codec, compress = "zlib", (lambda b: zlib.compress(b, 6))
+            manifest = {
+                "step": step, "extra": extra or {}, "codec": codec, "leaves": {}
+            }
             for i, (key, arr) in enumerate(sorted(host.items())):
                 fn = f"leaf_{i:05d}.npz"
                 manifest["leaves"][key] = {
@@ -106,7 +116,7 @@ class CheckpointStore:
                     "dtype": str(arr.dtype),
                 }
                 raw = arr.tobytes()
-                (tmp / fn).write_bytes(cctx.compress(raw))
+                (tmp / fn).write_bytes(compress(raw))
             (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
             final = self._step_dir(step)
             if final.exists():
@@ -146,10 +156,20 @@ class CheckpointStore:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         d = self._step_dir(step)
         manifest = json.loads((d / "MANIFEST.json").read_text())
-        dctx = zstandard.ZstdDecompressor()
+        codec = manifest.get("codec", "zstd")  # pre-codec manifests: zstd
+        if codec == "zstd":
+            if zstandard is None:
+                raise RuntimeError(
+                    f"checkpoint {d} is zstd-compressed but the 'zstandard' "
+                    "package is not installed; `pip install zstandard` to "
+                    "read it (new checkpoints fall back to zlib)"
+                )
+            decompress = zstandard.ZstdDecompressor().decompress
+        else:
+            decompress = zlib.decompress
         flat = {}
         for key, meta in manifest["leaves"].items():
-            raw = dctx.decompress((d / meta["file"]).read_bytes())
+            raw = decompress((d / meta["file"]).read_bytes())
             arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"]))
             flat[key] = arr.reshape(meta["shape"]).copy()
         tree = _unflatten(flat, template)

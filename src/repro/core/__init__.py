@@ -6,10 +6,11 @@ from .clusters import (
     FaultModel,
     HighElasticCluster,
 )
+from .engine import ClusterExecutor, StageEvent
 from .insights import CostExplorer, export_trace, price_menu
 from .cost_model import CostModel, Stage, StagePlan
 from .query import Query, QueryWork
 from .scheduler import BoEScheduler, QueryCoordinator, RelaxedScheduler, ServiceLayer
 from .simulator import SimConfig, SimResult, Simulation, run_sim
 from .sla import Policy, ServiceLevel, SLAConfig
-from .workload import TABLE1, generate, stream_histogram
+from .workload import TABLE1, generate, scaled_patterns, stream_histogram

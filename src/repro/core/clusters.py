@@ -2,6 +2,10 @@
 (on-demand burst slices) — paper §4.3's spot-VM vs cloud-function pair,
 instantiated for TPU (DESIGN.md §2).
 
+Both clusters are ClusterExecutors (core/engine.py): a running query is a
+cursor over its StagePlan, and completions come from one heap of
+predicted per-stage finish times.
+
 The cost-efficient cluster supports two execution modes:
   POS  — plan-oriented scaling (paper's Trino VM cluster): admitted
          queries share the whole slice under processor sharing with a
@@ -10,19 +14,24 @@ The cost-efficient cluster supports two execution modes:
          learned" complains about.
   SOS  — stage-oriented scaling: each query's stages run on an isolated
          fixed-size sub-slice with deterministic roofline times; queries
-         wait when no slice is free.
+         wait when no slice is free. SOS is where stage boundaries become
+         policy points: BEST_EFFORT runs can be preempted for a waiting
+         IMMEDIATE query, and the coordinator may spill the remaining
+         stages of a query to the elastic cluster under overload.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
 
 from ..perf.hw import V5E, HwSpec
-from .cost_model import CostModel
+from .cost_model import CostModel, Stage
+from .engine import ClusterExecutor, _Run
 from .query import Query
+from .sla import ServiceLevel
 
 
 @dataclass
@@ -44,7 +53,9 @@ class AutoscaleConfig:
 @dataclass
 class FaultModel:
     """Stage-level failures and stragglers (simulated; SOS executors
-    retry failed stages and speculatively duplicate stragglers)."""
+    retry failed stages and speculatively duplicate stragglers). The
+    engine samples outcomes PER STAGE, so a retry re-runs — and re-bills
+    — only the failed stage, never the whole query."""
 
     failure_prob: float = 0.0  # per stage
     straggler_prob: float = 0.0  # per stage
@@ -52,31 +63,32 @@ class FaultModel:
     speculation: bool = True  # duplicate stragglers (cap the tail)
     speculation_cap: float = 0.3  # dup launched after 30% over estimate
 
-    def stage_time(self, base: float, rng: np.random.Generator, q: Query) -> float:
+    def stage_execution(
+        self, base: float, chips: int, rng: np.random.Generator, q: Query
+    ) -> tuple[float, float, int]:
+        """Sample one stage run: (wall seconds, billed chip-seconds,
+        retries). A failed stage is re-run once and the re-run is billed;
+        a speculated straggler bills the duplicate's resources."""
         t = base
+        billed = base * chips
+        retries = 0
         if self.failure_prob and rng.random() < self.failure_prob:
             q.retries += 1
-            t += base  # one retry of the whole stage
+            retries = 1
+            t += base  # re-run only this stage
+            billed += base * chips  # the re-run is billed
         if self.straggler_prob and rng.random() < self.straggler_prob:
             tail = base * rng.exponential(self.straggler_scale)
             if self.speculation:
                 tail = min(tail, base * self.speculation_cap)
-                q.chip_seconds += base  # the duplicate's resources
+                billed += base * chips  # the duplicate's resources
             t += tail
-        return t
+        return t, billed, retries
 
-
-class _Running:
-    __slots__ = ("query", "remaining", "last_update")
-
-    def __init__(self, query: Query, remaining: float, now: float):
-        self.query = query
-        self.remaining = remaining  # chip-seconds of work left
-        self.last_update = now
-
-
-class CostEfficientCluster:
+class CostEfficientCluster(ClusterExecutor):
     """Reserved slice: `chips` chips at reserved unit price."""
+
+    name = "vm"
 
     def __init__(
         self,
@@ -90,7 +102,14 @@ class CostEfficientCluster:
         fault: Optional[FaultModel] = None,
         rng: Optional[np.random.Generator] = None,
         autoscale: Optional[AutoscaleConfig] = None,
+        preempt_best_effort: bool = False,
     ):
+        super().__init__(
+            cost_model=cost_model,
+            fault=fault or FaultModel(),
+            rng=rng,
+            price_per_chip_s=hw.reserved_price / 3600.0,
+        )
         self.chips = chips
         self.mode = mode
         self.max_concurrent = max_concurrent
@@ -100,22 +119,11 @@ class CostEfficientCluster:
         self.chip_seconds_provisioned = 0.0  # reserved-capacity accounting
         self._last_prov_t = 0.0
         self.slice_chips = sos_slice_chips
-        self.cost_model = cost_model or CostModel()
         self.hw = hw
-        self.fault = fault or FaultModel()
-        self.rng = rng or np.random.default_rng(0)
-        self.running: list[_Running] = []
-        self.waiting: list[Query] = []  # SOS: queries waiting for a slice
-        self.price_per_chip_s = hw.reserved_price / 3600.0
-
-    # --- the paper's "VM running queue" the coordinator watches ---
-    @property
-    def run_queue_len(self) -> int:
-        return len(self.running) + len(self.waiting)
-
-    @property
-    def idle(self) -> bool:
-        return self.run_queue_len == 0
+        self.preempt_best_effort = preempt_best_effort
+        # wired by the Simulation when SLAConfig.spill_enabled:
+        self.spill_to: Optional[ClusterExecutor] = None
+        self.spill_policy: Optional[Callable[[Query, float], bool]] = None
 
     # --- POS processor-sharing dynamics ---
     def _eff_rate_per_query(self) -> float:
@@ -126,16 +134,18 @@ class CostEfficientCluster:
             return float(self.chips)
         return (self.chips / k) / (1.0 + self.alpha * (k - 1))
 
-    def _apply_autoscale(self, now: float) -> None:
+    def _apply_autoscale(self, now: float) -> bool:
         a = self.autoscale
         if not a.enabled:
-            return
+            return False
         # provisioned chip-seconds (idle capacity is paid for too)
         self.chip_seconds_provisioned += self.chips * (now - self._last_prov_t)
         self._last_prov_t = now
         # apply due capacity changes
+        changed = False
         due = [c for t, c in self._pending_scale if t <= now]
         if due:
+            changed = due[-1] != self.chips
             self.chips = due[-1]
             self._pending_scale = [
                 (t, c) for t, c in self._pending_scale if t > now
@@ -147,89 +157,117 @@ class CostEfficientCluster:
             target = max(a.min_chips, self.chips - a.step_chips)
         if target is not None and not self._pending_scale:
             self._pending_scale.append((now + a.scale_delay_s, target))
+        return changed
 
-    def _advance(self, now: float) -> None:
-        self._apply_autoscale(now)
-        rate = self._eff_rate_per_query()
-        for r in self.running:
-            r.remaining -= rate * (now - r.last_update)
-            r.last_update = now
+    # --- engine hooks -------------------------------------------------
+    def _plan_chips(self, q: Query) -> int:
+        return self.chips if self.mode == "pos" else self.slice_chips
 
-    def submit(self, q: Query, now: float) -> None:
-        q.cluster = "vm"
+    def _run_rate(self, run: _Run) -> float:
         if self.mode == "pos":
-            self.waiting.append(q)
-            self._admit_pos(now)
-        else:  # SOS: wait for a free fixed-size slice
-            self.waiting.append(q)
-            self._try_start_sos(now)
+            return self._eff_rate_per_query()
+        return 1.0
 
-    def _admit_pos(self, now: float) -> None:
-        self._advance(now)
-        while self.waiting and len(self.running) < self.max_concurrent:
-            q = self.waiting.pop(0)
-            work_cs = self.cost_model.chip_seconds(q.work, self.chips)
-            q.start_time = now
-            q.chip_seconds += work_cs
-            self.running.append(_Running(q, work_cs, now))
+    def _stage_work(self, stage: Stage, q: Query) -> tuple[float, float, int]:
+        if self.mode == "pos":
+            # PS tracks remaining WORK (chip-seconds); no fault sampling
+            # in the interference model (matches the paper's Trino VM).
+            return stage.chip_seconds, stage.chip_seconds, 0
+        return self.fault.stage_execution(stage.time_s, stage.chips, self.rng, q)
 
-    def _try_start_sos(self, now: float) -> None:
+    def _sync(self, now: float) -> None:
+        if self.mode != "pos":
+            return
+        for run in self.running:
+            run.remaining = max(
+                run.remaining - run.rate * (now - run.last_update), 0.0
+            )
+            run.last_update = now
+
+    def _rates_changed(self, now: float) -> None:
+        if self.mode != "pos":
+            return
+        self._sync(now)
+        rate = self._eff_rate_per_query()
+        for run in self.running:
+            run.rate = rate
+            self._push(run, now)
+
+    def _pop_waiting(self) -> Query:
+        # SOS slice handoff: IMMEDIATE first, FIFO within a level (POS
+        # admission pops FIFO directly in _admit)
+        best = min(
+            range(len(self.waiting)),
+            key=lambda i: (int(self.waiting[i].current_sla), i),
+        )
+        return self.waiting.pop(best)
+
+    def _admit(self, now: float) -> None:
+        if self._apply_autoscale(now):
+            self._rates_changed(now)
+        if self.mode == "pos":
+            admitted = False
+            while self.waiting and len(self.running) < self.max_concurrent:
+                self._start_run(self.waiting.pop(0), now)
+                admitted = True
+            if admitted:
+                self._rates_changed(now)
+            return
+        # SOS: fixed-size isolated slices
         used = len(self.running) * self.slice_chips
         while self.waiting and used + self.slice_chips <= self.chips:
-            q = self.waiting.pop(0)
-            plan = self.cost_model.plan(q.work, self.slice_chips)
-            t = sum(
-                self.fault.stage_time(s.time_s, self.rng, q) for s in plan.stages
-            )
-            q.start_time = now
-            q.chip_seconds += plan.chip_seconds
-            r = _Running(q, t, now)  # SOS remaining is SECONDS (fixed rate 1)
-            self.running.append(r)
+            self._start_run(self._pop_waiting(), now)
             used += self.slice_chips
+        # stage-boundary preemption: a waiting IMMEDIATE query may bump a
+        # running BEST_EFFORT query at its next stage boundary; requests
+        # are re-derived from the CURRENT waiting queue each admission so
+        # a flag goes away when its IMMEDIATE found a slice elsewhere
+        if self.preempt_best_effort:
+            n_imm = sum(
+                1 for q in self.waiting if q.current_sla is ServiceLevel.IMMEDIATE
+            )
+            flagged = [r for r in self.running if r.preempt_requested]
+            for run in flagged[n_imm:]:  # stale: nobody is waiting for it
+                run.preempt_requested = False
+            need = n_imm - min(len(flagged), n_imm)
+            for run in self.running:
+                if need <= 0:
+                    break
+                if (
+                    not run.preempt_requested
+                    and run.query.current_sla is ServiceLevel.BEST_EFFORT
+                ):
+                    run.preempt_requested = True
+                    need -= 1
 
-    def next_completion(self, now: float) -> Optional[float]:
-        """Earliest absolute finish time among running queries."""
-        if not self.running:
-            return None
-        if self.mode == "pos":
-            rate = self._eff_rate_per_query()
-            self._advance(now)
-            return now + min(max(r.remaining, 0.0) / rate for r in self.running)
-        return now + min(max(r.remaining - (now - r.last_update), 0.0)
-                         for r in self.running)
-
-    def collect_finished(self, now: float) -> list[Query]:
-        done: list[Query] = []
-        if self.mode == "pos":
-            self._advance(now)
-            eps = 1e-9
-            still = []
-            for r in self.running:
-                if r.remaining <= eps:
-                    r.query.finish_time = now
-                    done.append(r.query)
-                else:
-                    still.append(r)
-            self.running = still
-            self._admit_pos(now)
-        else:
-            still = []
-            for r in self.running:
-                if (now - r.last_update) >= r.remaining - 1e-9:
-                    r.query.finish_time = now
-                    done.append(r.query)
-                else:
-                    still.append(r)
-            self.running = still
-            self._try_start_sos(now)
-        for q in done:
-            q.cost += q.chip_seconds * self.price_per_chip_s
-        return done
+    def _continue_run(self, run: _Run, now: float) -> bool:
+        if self.mode != "sos":
+            return True
+        q = run.query
+        if run.preempt_requested:
+            # stop at this boundary; chip-seconds already billed are kept
+            run.preempt_requested = False
+            q.preemptions += 1
+            q.state = "preempted"
+            self.waiting.append(q)  # resumes at stage_cursor on a free slice
+            return False
+        if (
+            self.spill_to is not None
+            and self.spill_policy is not None
+            and self.spill_policy(q, now)
+        ):
+            q.spilled = True
+            q.state = "spilled"
+            self.spill_to.submit(q, now)  # remaining stages at elastic rate
+            return False
+        return True
 
 
-class HighElasticCluster:
+class HighElasticCluster(ClusterExecutor):
     """On-demand burst slices: unbounded, seconds-level provisioning,
     `elastic_price_multiplier`x unit price (paper's CF: 9-24x)."""
+
+    name = "cf"
 
     def __init__(
         self,
@@ -243,25 +281,22 @@ class HighElasticCluster:
         rng: Optional[np.random.Generator] = None,
         price_multiplier: Optional[float] = None,
     ):
-        self.cost_model = cost_model or CostModel()
-        self.hw = hw
-        self.startup_s = startup_s
         mult = (
             price_multiplier
             if price_multiplier is not None
             else hw.elastic_price_multiplier
         )
+        super().__init__(
+            cost_model=cost_model,
+            fault=fault or FaultModel(),
+            rng=rng or np.random.default_rng(1),
+            price_per_chip_s=hw.reserved_price * mult / 3600.0,
+        )
+        self.hw = hw
+        self.startup_s = startup_s
         self.min_chips = min_chips
         self.max_chips = max_chips
         self.tokens_per_chip = tokens_per_chip
-        self.fault = fault or FaultModel()
-        self.rng = rng or np.random.default_rng(1)
-        self.running: list[tuple[float, Query]] = []  # (finish_time, q)
-        self.price_per_chip_s = hw.reserved_price * mult / 3600.0
-
-    @property
-    def run_queue_len(self) -> int:
-        return len(self.running)
 
     def slice_for(self, q: Query) -> int:
         """Bigger queries get bigger slices (paper §5.2: CF dynamically
@@ -269,25 +304,11 @@ class HighElasticCluster:
         want = math.ceil(q.work.total_tokens / self.tokens_per_chip)
         return int(min(self.max_chips, max(self.min_chips, want)))
 
-    def submit(self, q: Query, now: float) -> None:
-        q.cluster = "cf"
-        chips = self.slice_for(q)
-        plan = self.cost_model.plan(q.work, chips)
-        t = sum(self.fault.stage_time(s.time_s, self.rng, q) for s in plan.stages)
-        q.start_time = now + self.startup_s
-        q.chip_seconds += plan.chip_seconds
-        finish = q.start_time + t
-        q.cost += q.chip_seconds * self.price_per_chip_s
-        self.running.append((finish, q))
+    def _plan_chips(self, q: Query) -> int:
+        return self.slice_for(q)
 
-    def next_completion(self, now: float) -> Optional[float]:
-        if not self.running:
-            return None
-        return min(f for f, _ in self.running)
-
-    def collect_finished(self, now: float) -> list[Query]:
-        done = [q for f, q in self.running if f <= now + 1e-9]
-        self.running = [(f, q) for f, q in self.running if f > now + 1e-9]
-        for q in done:
-            q.finish_time = now
-        return done
+    def _admit(self, now: float) -> None:
+        # unbounded burst capacity: everything starts after provisioning
+        while self.waiting:
+            q = self.waiting.pop(0)
+            self._start_run(q, now + self.startup_s)

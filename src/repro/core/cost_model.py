@@ -48,6 +48,13 @@ class StagePlan:
     def chip_seconds(self) -> float:
         return sum(s.chip_seconds for s in self.stages)
 
+    # --- stage-cursor views (engine.py runs a query as a cursor) ------
+    def remaining_time(self, cursor: int = 0) -> float:
+        return sum(s.time_s for s in self.stages[cursor:])
+
+    def remaining_chip_seconds(self, cursor: int = 0) -> float:
+        return sum(s.chip_seconds for s in self.stages[cursor:])
+
 
 @lru_cache(maxsize=None)
 def _calibration(arch: str, kind: str) -> float:
@@ -102,16 +109,33 @@ def _decode_step_time(cfg: ModelConfig, batch: int, context: int, chips: int,
 
 
 class CostModel:
-    """Maps QueryWork -> StagePlan on a worker slice of `chips` chips."""
+    """Maps QueryWork -> StagePlan on a worker slice of `chips` chips.
 
-    def __init__(self, hw: HwSpec = V5E, use_calibration: bool = True):
+    Decode is split into chunks of ``decode_chunk_tokens`` tokens (0
+    disables chunking): long generations become a chain of short stages,
+    so they are preemptible at chunk boundaries and a fault retries only
+    the failed chunk. Plan STRUCTURE depends only on the work (never on
+    `chips`), so a mid-plan stage cursor stays valid when the remaining
+    stages are re-planned for a different slice size (cross-cluster
+    spill, preemption resume).
+    """
+
+    def __init__(self, hw: HwSpec = V5E, use_calibration: bool = True,
+                 decode_chunk_tokens: int = 32):
         self.hw = hw
         self.use_calibration = use_calibration
+        self.decode_chunk_tokens = decode_chunk_tokens
+        self._plan_cache: dict[tuple, StagePlan] = {}
 
     def _cal(self, arch: str, kind: str) -> float:
         return _calibration(arch, kind) if self.use_calibration else 1.0
 
     def plan(self, work: QueryWork, chips: int) -> StagePlan:
+        key = (work.arch, work.kind, work.batch, work.prompt_tokens,
+               work.output_tokens, work.train_steps, work.seq_len, chips)
+        cached = self._plan_cache.get(key)
+        if cached is not None:
+            return cached
         cfg = get_config(work.arch)
         cal = self._cal(work.arch, work.kind)
         stages: list[Stage] = []
@@ -127,10 +151,17 @@ class CostModel:
                 td = _decode_step_time(
                     cfg, work.batch, work.prompt_tokens, chips
                 )
-                stages.append(
-                    Stage("decode", cal * td * work.output_tokens, chips)
-                )
-        return StagePlan(tuple(stages))
+                chunk = self.decode_chunk_tokens or work.output_tokens
+                done = 0
+                while done < work.output_tokens:
+                    n = min(chunk, work.output_tokens - done)
+                    stages.append(
+                        Stage(f"decode[{done}:{done + n}]", cal * td * n, chips)
+                    )
+                    done += n
+        out = StagePlan(tuple(stages))
+        self._plan_cache[key] = out
+        return out
 
     def exec_time(self, work: QueryWork, chips: int) -> float:
         return self.plan(work, chips).exec_time

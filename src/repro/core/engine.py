@@ -1,0 +1,236 @@
+"""Stage-level execution engine: StagePlan is the unit of scheduling.
+
+The paper's SOS argument (§4.3/§5.3) is that each query *stage* runs on an
+isolated slice with a deterministic cost — that property is what makes
+pending-time SLAs and admission-time price quotes tractable. This module
+makes the runtime honor it: a running query is a cursor over its
+``StagePlan`` (``Query.stage_cursor``), and both clusters drive execution
+through one ``ClusterExecutor`` base whose core is a heap of predicted
+per-stage completion times.
+
+Heap discipline: every running stage has exactly one *valid* heap entry;
+entries are lazily invalidated by bumping ``_Run.epoch`` whenever a
+prediction changes (processor-sharing rate changes, preemption, spill),
+so reschedules are O(log n) pushes and stale entries are skipped on pop.
+This replaces the O(n) list scans the clusters used to do per event and
+the ``last_completion_push`` dedupe hack the simulator needed on top.
+
+Stage boundaries are where policy acts:
+  * preemption — a BEST_EFFORT query marked ``preempt_requested`` stops
+    at its next boundary and re-enters the waiting queue with its cursor
+    (and billed chip-seconds) intact;
+  * cross-cluster spill — the coordinator may hand the remaining stages
+    of a VM query to the elastic cluster (re-planned for the elastic
+    slice size, billed at the elastic rate from that stage on);
+  * fault recovery — the fault model is sampled per stage, so a retry
+    re-runs (and re-bills) only the failed stage.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .cost_model import CostModel, Stage, StagePlan
+from .query import Query
+
+
+@dataclass(frozen=True)
+class StageEvent:
+    """One completed stage execution — the per-stage trace record."""
+
+    qid: int
+    stage: str
+    index: int  # position in the query's StagePlan
+    cluster: str
+    start: float
+    finish: float
+    chips: int
+    chip_seconds: float  # billed (includes retry re-runs / speculation)
+    cost: float
+    retries: int
+
+
+class _Run:
+    """Execution state of the CURRENT stage of one admitted query."""
+
+    __slots__ = (
+        "query", "plan", "chips", "remaining", "rate", "last_update",
+        "epoch", "active", "stage_start", "billed_cs", "stage_retries",
+        "preempt_requested",
+    )
+
+    def __init__(self, query: Query, plan: StagePlan, chips: int):
+        self.query = query
+        self.plan = plan
+        self.chips = chips
+        self.remaining = 0.0  # work left in this stage (units set by rate)
+        self.rate = 1.0  # work units consumed per second
+        self.last_update = 0.0
+        self.epoch = 0  # bumped on every (re)prediction
+        self.active = True
+        self.stage_start = 0.0
+        self.billed_cs = 0.0
+        self.stage_retries = 0
+        self.preempt_requested = False
+
+
+class ClusterExecutor:
+    """Base for both clusters: admission + per-stage completion queue.
+
+    Subclasses implement ``_admit`` (capacity policy), ``_plan_chips``
+    (slice sizing) and may override ``_stage_work`` (fault sampling),
+    ``_run_rate``/``_rates_changed`` (processor sharing) and
+    ``_continue_run`` (stage-boundary preemption/spill policy).
+    """
+
+    name = "?"
+
+    def __init__(
+        self,
+        cost_model: Optional[CostModel] = None,
+        fault=None,
+        rng: Optional[np.random.Generator] = None,
+        price_per_chip_s: float = 0.0,
+    ):
+        self.cost_model = cost_model or CostModel()
+        self.fault = fault
+        self.rng = rng or np.random.default_rng(0)
+        self.price_per_chip_s = price_per_chip_s
+        # insertion-ordered for deterministic iteration, O(1) removal
+        self.running: dict[_Run, None] = {}
+        self.waiting: list[Query] = []
+        self._heap: list[tuple[float, int, _Run, int]] = []
+        self._seq = itertools.count()
+        self.stages_completed = 0
+
+    # --- queue state the coordinator watches -------------------------
+    @property
+    def run_queue_len(self) -> int:
+        return len(self.running) + len(self.waiting)
+
+    @property
+    def idle(self) -> bool:
+        return self.run_queue_len == 0
+
+    # --- subclass hooks ----------------------------------------------
+    def _admit(self, now: float) -> None:
+        raise NotImplementedError
+
+    def _plan_chips(self, q: Query) -> int:
+        raise NotImplementedError
+
+    def _stage_work(self, stage: Stage, q: Query) -> tuple[float, float, int]:
+        """(work units, billed chip-seconds, retries) for one stage run.
+        Default: wall-seconds at rate 1, fault model sampled per stage."""
+        if self.fault is None:
+            return stage.time_s, stage.chip_seconds, 0
+        return self.fault.stage_execution(
+            stage.time_s, stage.chips, self.rng, q
+        )
+
+    def _run_rate(self, run: _Run) -> float:
+        return 1.0
+
+    def _rates_changed(self, now: float) -> None:
+        """Concurrency changed — subclasses with shared rates reschedule."""
+
+    def _sync(self, now: float) -> None:
+        """Advance run bookkeeping to `now` (shared-rate subclasses)."""
+
+    def _continue_run(self, run: _Run, now: float) -> bool:
+        """Stage-boundary policy: return False to withhold the next stage
+        (the run is retired; the query was re-routed or re-queued)."""
+        return True
+
+    # --- heap machinery ----------------------------------------------
+    def _push(self, run: _Run, now: float) -> None:
+        run.epoch += 1
+        t = now + max(run.remaining, 0.0) / run.rate
+        heapq.heappush(self._heap, (t, next(self._seq), run, run.epoch))
+
+    def _prune(self) -> None:
+        h = self._heap
+        while h and (not h[0][2].active or h[0][3] != h[0][2].epoch):
+            heapq.heappop(h)
+
+    def next_event_time(self) -> Optional[float]:
+        """Earliest valid predicted stage completion (absolute time)."""
+        self._prune()
+        return self._heap[0][0] if self._heap else None
+
+    # --- lifecycle ----------------------------------------------------
+    def submit(self, q: Query, now: float) -> None:
+        q.cluster = self.name
+        self.waiting.append(q)
+        self._admit(now)
+
+    def _start_run(self, q: Query, now: float) -> _Run:
+        chips = self._plan_chips(q)
+        plan = self.cost_model.plan(q.work, chips)
+        run = _Run(q, plan, chips)
+        if q.start_time is None:
+            q.start_time = now
+        q.state = "running"
+        self.running[run] = None
+        self._begin_stage(run, now)
+        return run
+
+    def _begin_stage(self, run: _Run, now: float) -> None:
+        stage = run.plan.stages[run.query.stage_cursor]
+        work, billed, retries = self._stage_work(stage, run.query)
+        run.stage_start = now
+        run.remaining = work
+        run.last_update = now
+        run.rate = self._run_rate(run)
+        run.billed_cs = billed
+        run.stage_retries = retries
+        self._push(run, now)
+
+    def advance_to(self, now: float) -> list[Query]:
+        """Process every stage completion due by `now`; returns queries
+        that finished their final stage (stamped with the exact per-stage
+        completion time, not the event-processing time)."""
+        finished: list[Query] = []
+        while True:
+            self._prune()
+            if not self._heap or self._heap[0][0] > now + 1e-9:
+                break
+            t, _, run, _ = heapq.heappop(self._heap)
+            self._finish_stage(run, t, finished)
+        self._admit(now)
+        return finished
+
+    def _finish_stage(self, run: _Run, t: float, finished: list[Query]) -> None:
+        self._sync(t)
+        q = run.query
+        stage = run.plan.stages[q.stage_cursor]
+        cost = run.billed_cs * self.price_per_chip_s
+        q.chip_seconds += run.billed_cs
+        q.cost += cost
+        q.stage_trace.append(StageEvent(
+            qid=q.qid, stage=stage.name, index=q.stage_cursor,
+            cluster=self.name, start=run.stage_start, finish=t,
+            chips=run.chips, chip_seconds=run.billed_cs, cost=cost,
+            retries=run.stage_retries,
+        ))
+        self.stages_completed += 1
+        q.stage_cursor += 1
+        if q.stage_cursor >= len(run.plan.stages):
+            run.active = False
+            del self.running[run]
+            q.finish_time = t
+            q.state = "done"
+            finished.append(q)
+            self._rates_changed(t)
+            self._admit(t)
+        elif not self._continue_run(run, t):
+            run.active = False
+            del self.running[run]
+            self._rates_changed(t)
+            self._admit(t)
+        else:
+            self._begin_stage(run, t)

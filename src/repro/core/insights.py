@@ -156,6 +156,9 @@ def export_trace(queries: Iterable[Query], path: str) -> int:
                 "chip_seconds": round(q.chip_seconds, 4),
                 "cost": round(q.cost, 6),
                 "retries": q.retries,
+                "stages": len(q.stage_trace),
+                "preemptions": q.preemptions,
+                "spilled": q.spilled,
             }) + "\n")
             n += 1
     return n

@@ -54,6 +54,21 @@ class Query:
     cost: float = 0.0
     retries: int = 0
 
+    # stage-level engine state (core/engine.py): a running query is a
+    # cursor over its StagePlan; the cursor survives preemption and
+    # cross-cluster spill, so completed stages are never re-run.
+    stage_cursor: int = 0  # next stage index to execute
+    state: str = "pending"  # pending|running|preempted|spilled|done
+    preemptions: int = 0
+    spilled: bool = False
+    stage_trace: list = field(default_factory=list)  # StageEvent records
+
+    @property
+    def current_sla(self) -> ServiceLevel:
+        """The level the runtime acts on: the w/o-SLA rewrite when one
+        has been applied, the submitted level otherwise."""
+        return self.effective_sla if self.effective_sla is not None else self.sla
+
     @property
     def pending_time(self) -> Optional[float]:
         """Time in the SLA pending queue (what the guarantee covers)."""

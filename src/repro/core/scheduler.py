@@ -41,6 +41,31 @@ def fuse_queries(queries: list[Query], now: float) -> Query:
     return merged
 
 
+def _fusable(head: Query, q: Query) -> bool:
+    """Fusion safety: identical (arch, kind, prompt, output) only — a
+    train query must never fuse with a serve query, and mismatched
+    decode lengths would mis-bill the shorter members."""
+    return (
+        q.work.arch == head.work.arch
+        and q.work.kind == head.work.kind
+        and q.work.prompt_tokens == head.work.prompt_tokens
+        and q.work.output_tokens == head.work.output_tokens
+    )
+
+
+def pop_fused(queue: deque, now: float, fuse: bool, fuse_max: int) -> Query:
+    """Pop the queue head, fusing compatible waiting queries behind it.
+    Shared by the relaxed and BoE schedulers so both apply the same
+    matching rules. Only serve queries fuse (train steps don't batch)."""
+    head = queue.popleft()
+    if not fuse or head.work.kind != "serve":
+        return head
+    same = [q for q in list(queue) if _fusable(head, q)][: fuse_max - 1]
+    for q in same:
+        queue.remove(q)
+    return fuse_queries([head] + same, now)
+
+
 class QueryCoordinator:
     """Routes a dequeued query to a cluster (paper §4.3)."""
 
@@ -66,23 +91,49 @@ class QueryCoordinator:
     # "it is easier to profile and control the performance and cost").
     # ------------------------------------------------------------------
     def estimate(self, q: Query) -> dict:
-        """Latency/cost quote for both pools at the current load."""
+        """Latency/cost quote for both pools at the current load. Quotes
+        cover only the REMAINING stages (q.stage_cursor onward), so a
+        preempted or spill-candidate query is priced for what's left,
+        not for work it already ran."""
         cm = self.vm.cost_model
-        vm_exec = cm.exec_time(q.work, self.vm.chips)
+        cur = q.stage_cursor
+        vm_plan = cm.plan(q.work, self.vm.chips)
+        vm_exec = vm_plan.remaining_time(cur)
         # POS: effective rate divides across running queries w/ interference
         k = self.vm.run_queue_len + 1
         vm_latency = vm_exec * k * (1.0 + self.vm.alpha * (k - 1))
-        vm_cost = cm.chip_seconds(q.work, self.vm.chips) * self.vm.price_per_chip_s
-        cf_chips = self.cf.slice_for(q)
-        cf_latency = self.cf.startup_s + cm.exec_time(q.work, cf_chips)
-        cf_cost = cm.chip_seconds(q.work, cf_chips) * self.cf.price_per_chip_s
+        vm_cost = vm_plan.remaining_chip_seconds(cur) * self.vm.price_per_chip_s
+        cf_plan = cm.plan(q.work, self.cf.slice_for(q))
+        cf_latency = self.cf.startup_s + cf_plan.remaining_time(cur)
+        cf_cost = cf_plan.remaining_chip_seconds(cur) * self.cf.price_per_chip_s
         return {
             "vm": {"latency_s": vm_latency, "cost": vm_cost},
             "cf": {"latency_s": cf_latency, "cost": cf_cost},
         }
 
+    def should_spill(self, q: Query, now: float) -> bool:
+        """Stage-boundary spill policy (SLAConfig.spill_enabled): move the
+        remaining stages of a running VM query to the elastic cluster
+        when its slice pool is overloaded — a waiting query AT LEAST AS
+        urgent as `q` has no slice — and the remaining work is worth the
+        elastic premium. A less-urgent waiter never displaces a runner
+        (a deadline-distant RELAXED query must not push an IMMEDIATE
+        query onto the 9-24x-priced pool), and BEST_EFFORT queries are
+        never spilled — they are preempted instead."""
+        if q.current_sla is ServiceLevel.BEST_EFFORT:
+            return False
+        displacing_waiter = any(
+            w.current_sla is not ServiceLevel.BEST_EFFORT
+            and w.current_sla <= q.current_sla
+            for w in self.vm.waiting
+        )
+        if not displacing_waiter:
+            return False
+        plan = self.vm.cost_model.plan(q.work, self.vm.slice_chips)
+        return plan.remaining_time(q.stage_cursor) >= self.cfg.spill_min_remaining_s
+
     def route(self, q: Query, now: float) -> str:
-        sla = q.effective_sla if q.effective_sla is not None else q.sla
+        sla = q.current_sla
         if self.policy is Policy.LATENCY_AWARE:
             est = self.estimate(q)
             target = q.latency_target_s
@@ -122,20 +173,6 @@ class RelaxedScheduler:
     def enqueue(self, q: Query) -> None:
         self.q.append(q)
 
-    def _pop_fused(self, now: float) -> Query:
-        head = self.q.popleft()
-        if not self.fuse:
-            return head
-        same = [
-            q for q in list(self.q)
-            if q.work.arch == head.work.arch
-            and q.work.prompt_tokens == head.work.prompt_tokens
-            and q.work.kind == head.work.kind
-        ][: self.fuse_max - 1]
-        for q in same:
-            self.q.remove(q)
-        return fuse_queries([head] + same, now)
-
     def poll(self, now: float) -> list[Query]:
         out = []
         while self.q:
@@ -147,7 +184,7 @@ class RelaxedScheduler:
             can_exec = not self.coordinator.vm_overloaded
             if not (can_exec or deadline_near):
                 break
-            q = self._pop_fused(now)
+            q = pop_fused(self.q, now, self.fuse, self.fuse_max)
             q.dequeue_time = now
             self.coordinator.route(q, now)
             out.append(q)
@@ -171,16 +208,7 @@ class BoEScheduler:
     def poll(self, now: float) -> list[Query]:
         out = []
         while self.q and self.coordinator.vm.run_queue_len <= self.cfg.boe_idle_threshold:
-            head = self.q.popleft()
-            if self.fuse:
-                same = [
-                    q for q in list(self.q)
-                    if q.work.arch == head.work.arch
-                    and q.work.prompt_tokens == head.work.prompt_tokens
-                ][: self.fuse_max - 1]
-                for q in same:
-                    self.q.remove(q)
-                head = fuse_queries([head] + same, now)
+            head = pop_fused(self.q, now, self.fuse, self.fuse_max)
             head.dequeue_time = now
             self.coordinator.route(head, now)
             out.append(head)

@@ -1,14 +1,21 @@
 """Discrete-event simulation of the full serverless query service.
 
-Events: query arrivals, scheduler polls, cluster completions. Query
-execution times come from the deterministic stage cost model (grounded in
-the dry-run roofline, DESIGN.md §6), so the simulation and the compiled
-artifacts share one source of truth.
+Events: query arrivals, scheduler polls, and STAGE completions. Both
+clusters are ClusterExecutors (core/engine.py): each keeps one heap of
+predicted per-stage finish times, and the simulator simply wakes at the
+earliest predicted stage event — no per-cluster completion dedupe is
+needed because stale heap entries are epoch-invalidated inside the
+executors and `advance_to` is idempotent.
+
+Query execution times come from the deterministic stage cost model
+(grounded in the dry-run roofline, DESIGN.md §6), so the simulation and
+the compiled artifacts share one source of truth.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Iterable, Optional
 
@@ -21,6 +28,7 @@ from .clusters import (
     HighElasticCluster,
 )
 from .cost_model import CostModel
+from .engine import StageEvent
 from .query import Query
 from .scheduler import QueryCoordinator, ServiceLayer
 from .sla import Policy, ServiceLevel, SLAConfig
@@ -43,6 +51,9 @@ class SimConfig:
     autoscale: AutoscaleConfig = field(default_factory=AutoscaleConfig)
     fuse_queries: bool = False  # beyond-paper: multi-query batch fusion
     horizon_s: Optional[float] = None  # stop collecting after this time
+    #: decode stages are chunked to at most this many tokens, making long
+    #: generations preemptible/retryable at chunk granularity (0 = off)
+    decode_chunk_tokens: int = 32
 
 
 @dataclass
@@ -75,6 +86,12 @@ class SimResult:
             and q.pending_time is not None
             and q.pending_time > deadline_s + 1e-6
         ]
+
+    def stage_events(self) -> list[StageEvent]:
+        """The per-stage execution trace, ordered by completion time."""
+        evs = [e for q in self.queries for e in q.stage_trace]
+        evs.sort(key=lambda e: (e.finish, e.qid, e.index))
+        return evs
 
     def cumulative(self, attr: str = "cost") -> dict[str, tuple[list, list]]:
         """Per-SLA (times, cumulative-values) for Fig 6/7-style curves."""
@@ -112,6 +129,10 @@ class SimResult:
             )
             if by["imm"]
             else 0.0,
+            "stages": sum(len(q.stage_trace) for q in self.queries),
+            "preemptions": sum(q.preemptions for q in self.queries),
+            "spilled": sum(q.spilled for q in self.queries),
+            "retries": sum(q.retries for q in self.queries),
         }
 
 
@@ -119,7 +140,10 @@ class Simulation:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
         rng = np.random.default_rng(cfg.seed)
-        cm = CostModel(use_calibration=cfg.use_calibration)
+        cm = CostModel(
+            use_calibration=cfg.use_calibration,
+            decode_chunk_tokens=cfg.decode_chunk_tokens,
+        )
         self.vm = CostEfficientCluster(
             chips=cfg.vm_chips,
             mode=cfg.vm_mode,
@@ -129,12 +153,16 @@ class Simulation:
             fault=cfg.fault,
             rng=rng,
             autoscale=cfg.autoscale,
+            preempt_best_effort=cfg.sla.preempt_best_effort,
         )
         self.cf = HighElasticCluster(
             cost_model=cm, startup_s=cfg.cf_startup_s, fault=cfg.fault, rng=rng,
             price_multiplier=cfg.elastic_price_multiplier,
         )
         self.coordinator = QueryCoordinator(self.vm, self.cf, cfg.policy, cfg.sla)
+        if cfg.sla.spill_enabled:
+            self.vm.spill_to = self.cf
+            self.vm.spill_policy = self.coordinator.should_spill
         self.service = ServiceLayer(
             self.coordinator, cfg.sla, cfg.sla_enabled, fuse=cfg.fuse_queries
         )
@@ -152,21 +180,19 @@ class Simulation:
         for q in arrivals:
             push(q.submit_time, "arrival")
         if arrivals:
-            t0 = arrivals[0].submit_time
-            push(t0, "poll")
+            push(arrivals[0].submit_time, "poll")
         ai = 0
-        last_completion_push = [None, None]
-
-        def refresh_completions(now: float) -> None:
-            for idx, cluster in enumerate((self.vm, self.cf)):
-                nxt = cluster.next_completion(now)
-                if nxt is not None and nxt != last_completion_push[idx]:
-                    push(max(nxt, now), f"complete{idx}")
-                    last_completion_push[idx] = nxt
+        # earliest scheduled stage wake-up; a new push happens only when a
+        # strictly earlier stage completion appears, so the heap never
+        # floods with duplicates (this replaces the old per-cluster
+        # last_completion_push dedupe).
+        stage_wake = math.inf
 
         while events:
             now, _, kind = heapq.heappop(events)
-            if kind == "arrival":
+            if kind == "stage" and now >= stage_wake - 1e-12:
+                stage_wake = math.inf
+            elif kind == "arrival":
                 while ai < len(arrivals) and arrivals[ai].submit_time <= now + 1e-9:
                     self.service.submit(arrivals[ai], now)
                     ai += 1
@@ -179,10 +205,20 @@ class Simulation:
                     or self.cf.run_queue_len
                 ):
                     push(now + cfg.sla.poll_period_s, "poll")
-            elif kind.startswith("complete"):
-                finished.extend(self.vm.collect_finished(now))
-                finished.extend(self.cf.collect_finished(now))
-            refresh_completions(now)
+            # drain every stage completion due by now (exact per-stage
+            # finish times are stamped inside the executors)
+            finished.extend(self.vm.advance_to(now))
+            finished.extend(self.cf.advance_to(now))
+            nxts = [
+                t
+                for t in (self.vm.next_event_time(), self.cf.next_event_time())
+                if t is not None
+            ]
+            if nxts:
+                t = max(min(nxts), now)
+                if t < stage_wake - 1e-12:
+                    push(t, "stage")
+                    stage_wake = t
 
         # unpack fused queries: members share times; cost splits by tokens
         expanded: list[Query] = []
@@ -192,13 +228,19 @@ class Simulation:
                 expanded.append(q)
                 continue
             tot = sum(m.work.total_tokens for m in members)
-            for m in members:
+            for i, m in enumerate(members):
                 share = m.work.total_tokens / max(tot, 1)
                 m.start_time = q.start_time
                 m.finish_time = q.finish_time
                 m.cluster = q.cluster
+                m.state = q.state
                 m.chip_seconds = q.chip_seconds * share
                 m.cost = q.cost * share
+                if i == 0:  # the fused run's stage trace and engine
+                    m.stage_trace = q.stage_trace  # counters live on one
+                    m.retries = q.retries  # member so summaries stay exact
+                    m.preemptions = q.preemptions
+                    m.spilled = q.spilled
                 expanded.append(m)
         return SimResult(expanded, cfg)
 

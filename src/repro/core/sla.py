@@ -47,3 +47,15 @@ class SLAConfig:
     vm_overload_threshold: int = 8
     #: BoE drains only when the cost-efficient cluster is idle (length 0)
     boe_idle_threshold: int = 0
+    # --- stage-level engine policy (core/engine.py; SOS mode only) ----
+    #: an arriving IMMEDIATE query may bump a running BEST_EFFORT query
+    #: at its next stage boundary (preempted work resumes at the next
+    #: unfinished stage; chip-seconds already spent are kept and billed)
+    preempt_best_effort: bool = False
+    #: the coordinator may route the REMAINING stages of a VM query to
+    #: the elastic cluster when its slice pool is overloaded mid-query
+    #: (a waiting query at least as urgent has no slice)
+    spill_enabled: bool = False
+    #: only spill queries whose remaining stages are worth the elastic
+    #: premium (seconds of remaining work on the VM slice)
+    spill_min_remaining_s: float = 5.0

@@ -15,7 +15,7 @@ architecture. Counts, dataset sizes, and SLA mixes follow Table 1:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Optional
 
 import numpy as np
@@ -66,6 +66,16 @@ TABLE1: tuple[PatternSpec, ...] = (
         arch="phi3.5-moe-42b-a6.6b", timing="spread", batch=2, output_tokens=128,
     ),
 )
+
+
+def scaled_patterns(
+    factor: float, patterns: tuple[PatternSpec, ...] = TABLE1
+) -> tuple[PatternSpec, ...]:
+    """Table 1 with query counts scaled by `factor` (SLA mixes and timing
+    shapes preserved) — the organization-of-N-users knob for scale runs."""
+    return tuple(
+        replace(p, count=max(1, int(round(p.count * factor)))) for p in patterns
+    )
 
 
 def _arrival_times(

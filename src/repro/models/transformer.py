@@ -478,7 +478,7 @@ class LM:
                 return lead + ("batch", None, "conv_ch")
             raise ValueError(f"unknown cache leaf {names}")
 
-        return jax.tree.map_with_path(one, cache_spec)
+        return jax.tree_util.tree_map_with_path(one, cache_spec)
 
     def init_cache(self, batch: int, kv_len: int, dtype=jnp.bfloat16,
                    enc_len: Optional[int] = None) -> dict:
@@ -538,7 +538,7 @@ class LM:
             )
             return out.at[:, :, idx].set(kept)
 
-        blocks = jax.tree.map_with_path(place, caches)
+        blocks = jax.tree_util.tree_map_with_path(place, caches)
         out = {"lengths": jnp.full((B,), S, jnp.int32), "blocks": blocks}
         if self.cfg.is_encoder_decoder:
             cross = {}

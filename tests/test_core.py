@@ -197,10 +197,10 @@ def test_fault_model_straggler_speculation_bounds_tail():
     fm = FaultModel(straggler_prob=1.0, straggler_scale=10.0, speculation=True)
     rng = np.random.default_rng(0)
     q = _mk(ServiceLevel.IMMEDIATE, 0.0)
-    times = [fm.stage_time(10.0, rng, q) for _ in range(100)]
+    times = [fm.stage_execution(10.0, 1, rng, q)[0] for _ in range(100)]
     assert max(times) <= 10.0 * (1 + fm.speculation_cap) + 1e-9
     fm2 = FaultModel(straggler_prob=1.0, straggler_scale=10.0, speculation=False)
-    times2 = [fm2.stage_time(10.0, rng, q) for _ in range(100)]
+    times2 = [fm2.stage_execution(10.0, 1, rng, q)[0] for _ in range(100)]
     assert max(times2) > 10.0 * 2  # unbounded tail without speculation
 
 
@@ -208,8 +208,9 @@ def test_fault_model_failures_retry():
     fm = FaultModel(failure_prob=1.0)
     rng = np.random.default_rng(0)
     q = _mk(ServiceLevel.IMMEDIATE, 0.0)
-    t = fm.stage_time(5.0, rng, q)
-    assert t == 10.0 and q.retries == 1
+    t, billed, retries = fm.stage_execution(5.0, 2, rng, q)
+    assert t == 10.0 and q.retries == 1 and retries == 1
+    assert billed == 20.0  # the re-run of the failed stage is billed
 
 
 # ---------------------------------------------------------------------------

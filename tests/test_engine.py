@@ -1,0 +1,307 @@
+"""Stage-level execution engine (core/engine.py): stage cursors,
+stage-boundary preemption, cross-cluster spill, stage-granular fault
+retry billing, exact per-stage finish times, and determinism."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultModel,
+    HighElasticCluster,
+    Policy,
+    Query,
+    QueryWork,
+    ServiceLevel,
+    SimConfig,
+    Simulation,
+    SLAConfig,
+    generate,
+    run_sim,
+)
+from repro.core.cost_model import CostModel
+
+
+def _mk(sla, t, tokens=100_000, out=8, arch="paper-default"):
+    return Query(
+        work=QueryWork(arch=arch, prompt_tokens=tokens, output_tokens=out),
+        sla=sla,
+        submit_time=t,
+    )
+
+
+PIN_VM = dict(vm_overload_threshold=10**9)  # keep the coordinator on the VM
+
+
+# ---------------------------------------------------------------------------
+# chunked decode plans
+# ---------------------------------------------------------------------------
+
+def test_decode_chunking_preserves_totals():
+    w = QueryWork(arch="paper-default", prompt_tokens=200_000, output_tokens=100)
+    chunked = CostModel(use_calibration=False, decode_chunk_tokens=32).plan(w, 8)
+    whole = CostModel(use_calibration=False, decode_chunk_tokens=0).plan(w, 8)
+    names = [s.name for s in chunked.stages]
+    assert names[0] == "prefill"
+    assert names[1:] == [
+        "decode[0:32]", "decode[32:64]", "decode[64:96]", "decode[96:100]"
+    ]
+    assert chunked.exec_time == pytest.approx(whole.exec_time)
+    assert chunked.chip_seconds == pytest.approx(whole.chip_seconds)
+    # structure depends on the work only, never on the slice size — the
+    # invariant that keeps a mid-plan cursor valid across a spill
+    assert names == [s.name for s in
+                     CostModel(use_calibration=False).plan(w, 64).stages]
+
+
+def test_remaining_views_follow_cursor():
+    w = QueryWork(arch="paper-default", prompt_tokens=200_000, output_tokens=64)
+    plan = CostModel(use_calibration=False).plan(w, 8)
+    assert plan.remaining_time(0) == pytest.approx(plan.exec_time)
+    assert plan.remaining_time(1) == pytest.approx(
+        plan.exec_time - plan.stages[0].time_s
+    )
+    assert plan.remaining_chip_seconds(len(plan.stages)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# exact per-stage finish times (the old collect_finished stamped the
+# event-processing time, inflating exec_time for queries that finished
+# between events)
+# ---------------------------------------------------------------------------
+
+def test_elastic_finish_time_is_exact_not_event_time():
+    cm = CostModel(use_calibration=False)
+    cf = HighElasticCluster(cost_model=cm, startup_s=2.0)
+    q = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=500_000, out=16)
+    q.dequeue_time = 0.0
+    cf.submit(q, 0.0)
+    done = cf.advance_to(10_000.0)  # event arrives long after the finish
+    assert done == [q]
+    expected = 2.0 + cm.plan(q.work, cf.slice_for(q)).exec_time
+    assert q.finish_time == pytest.approx(expected)
+    assert q.exec_time == pytest.approx(expected - 2.0)
+
+
+def test_stage_trace_tiles_execution():
+    qs = [_mk(ServiceLevel.IMMEDIATE, 0.0, tokens=400_000, out=70)]
+    res = run_sim(qs, vm_mode="sos", vm_chips=32, sos_slice_chips=32,
+                  use_calibration=False, sla=SLAConfig(**PIN_VM))
+    (q,) = res.queries
+    trace = q.stage_trace
+    assert [e.stage for e in trace][0] == "prefill"
+    assert len(trace) == 1 + 3  # 70 decode tokens -> 3 chunks of <=32
+    # stages are contiguous and cover [start, finish]
+    assert trace[0].start == pytest.approx(q.start_time)
+    for a, b in zip(trace, trace[1:]):
+        assert b.start == pytest.approx(a.finish)
+    assert trace[-1].finish == pytest.approx(q.finish_time)
+    # billing is exactly the sum of the per-stage bills
+    assert q.chip_seconds == pytest.approx(sum(e.chip_seconds for e in trace))
+    assert q.cost == pytest.approx(sum(e.cost for e in trace))
+
+
+# ---------------------------------------------------------------------------
+# stage-boundary preemption of BEST_EFFORT by IMMEDIATE
+# ---------------------------------------------------------------------------
+
+def _preemption_run(preempt: bool):
+    # one SOS slice: the BoE query holds it, the IMMEDIATE query arrives
+    # mid-decode (long chunked generation = many preemption points)
+    boe = _mk(ServiceLevel.BEST_EFFORT, 0.0, tokens=2_000_000, out=2048)
+    imm = _mk(ServiceLevel.IMMEDIATE, 30.0, tokens=100_000, out=8)
+    res = run_sim(
+        [boe, imm],
+        vm_mode="sos", vm_chips=4, sos_slice_chips=4,
+        use_calibration=False,
+        sla=SLAConfig(preempt_best_effort=preempt, **PIN_VM),
+    )
+    by = {q.sla: q for q in res.queries}
+    return by[ServiceLevel.BEST_EFFORT], by[ServiceLevel.IMMEDIATE]
+
+
+def test_preemption_lets_immediate_jump_the_slice():
+    boe_on, imm_on = _preemption_run(True)
+    boe_off, imm_off = _preemption_run(False)
+    # without preemption the IMMEDIATE query waits out the whole BoE run
+    assert imm_off.start_time >= boe_off.finish_time - 1e-6
+    # with preemption it starts at the next stage boundary instead
+    assert imm_on.start_time < imm_off.start_time - 1.0
+    assert boe_on.preemptions >= 1 and imm_on.preemptions == 0
+    # the preempted query resumes at its next unfinished stage and finishes
+    assert boe_on.finish_time is not None
+    assert boe_on.state == "done"
+    # chip-seconds already spent are kept and billed, never re-run: the
+    # bill equals the plan's total in both worlds (monotone, no re-billing)
+    assert boe_on.chip_seconds == pytest.approx(boe_off.chip_seconds)
+    assert len(boe_on.stage_trace) == len(boe_off.stage_trace)
+    # stage indices are strictly increasing: no stage ran twice
+    idx = [e.index for e in boe_on.stage_trace]
+    assert idx == sorted(set(idx))
+
+
+def test_preemption_invariant_under_paper_stream():
+    qs = generate(horizon_s=3600, seed=5)
+    res = run_sim(qs, vm_mode="sos", vm_chips=64, sos_slice_chips=16,
+                  use_calibration=False,
+                  sla=SLAConfig(preempt_best_effort=True))
+    assert all(q.finish_time is not None for q in res.queries)
+    # every preempted query still ran each stage exactly once
+    for q in res.queries:
+        if q.preemptions:
+            idx = [e.index for e in q.stage_trace]
+            assert idx == sorted(set(idx))
+
+
+# ---------------------------------------------------------------------------
+# cross-cluster spill: remaining stages move to the elastic cluster
+# ---------------------------------------------------------------------------
+
+def test_spill_moves_remaining_stages_to_cf_at_cf_rate():
+    long_q = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=2_000_000, out=2048)
+    rival = _mk(ServiceLevel.IMMEDIATE, 30.0, tokens=100_000, out=8)
+    cfg = SimConfig(
+        vm_mode="sos", vm_chips=4, sos_slice_chips=4, use_calibration=False,
+        sla=SLAConfig(spill_enabled=True, spill_min_remaining_s=5.0, **PIN_VM),
+    )
+    sim = Simulation(cfg)
+    res = sim.run([long_q, rival])
+    by_id = {q.qid: q for q in res.queries}
+    spilled = by_id[long_q.qid]
+    assert spilled.spilled and spilled.finish_time is not None
+    clusters = [e.cluster for e in spilled.stage_trace]
+    assert clusters[0] == "vm" and clusters[-1] == "cf"
+    # once spilled, it never comes back mid-plan
+    assert clusters == sorted(clusters, key=lambda c: c != "vm")
+    # remaining stages are billed at the elastic rate, earlier ones at the
+    # reserved rate
+    for e in spilled.stage_trace:
+        price = (sim.vm if e.cluster == "vm" else sim.cf).price_per_chip_s
+        assert e.cost == pytest.approx(e.chip_seconds * price)
+    assert sim.cf.price_per_chip_s > sim.vm.price_per_chip_s
+    # the freed slice goes to the waiting query at the spill boundary
+    assert by_id[rival.qid].start_time < spilled.finish_time
+    # no stage lost or duplicated across the handoff
+    idx = [e.index for e in spilled.stage_trace]
+    assert idx == list(range(len(idx)))
+
+
+def test_boe_is_never_spilled_to_the_expensive_pool():
+    boe = _mk(ServiceLevel.BEST_EFFORT, 0.0, tokens=2_000_000, out=2048)
+    imm = _mk(ServiceLevel.IMMEDIATE, 30.0, tokens=100_000, out=8)
+    res = run_sim(
+        [boe, imm],
+        vm_mode="sos", vm_chips=4, sos_slice_chips=4, use_calibration=False,
+        sla=SLAConfig(spill_enabled=True, **PIN_VM),
+    )
+    boe_q = [q for q in res.queries if q.sla is ServiceLevel.BEST_EFFORT][0]
+    assert not boe_q.spilled
+    assert all(e.cluster == "vm" for e in boe_q.stage_trace)
+
+
+# ---------------------------------------------------------------------------
+# stage-granular faults: a retry re-runs (and re-bills) ONLY the failed
+# stage
+# ---------------------------------------------------------------------------
+
+def test_fault_rebills_only_failed_stages():
+    qs = [_mk(ServiceLevel.IMMEDIATE, 0.0, tokens=400_000, out=70)]
+    res = run_sim(qs, vm_mode="sos", vm_chips=32, sos_slice_chips=32,
+                  use_calibration=False, fault=FaultModel(failure_prob=0.5),
+                  seed=7, sla=SLAConfig(**PIN_VM))
+    (q,) = res.queries
+    plan = CostModel(use_calibration=False).plan(q.work, 32)
+    assert q.retries > 0  # seed chosen so some stage actually failed
+    failed_cs = ok_cs = 0.0
+    for e, s in zip(q.stage_trace, plan.stages):
+        # each stage bills its own work once per run: 1x clean, 2x retried
+        assert e.chip_seconds == pytest.approx(s.chip_seconds * (1 + e.retries))
+        (failed_cs, ok_cs) = (
+            (failed_cs + s.chip_seconds, ok_cs) if e.retries
+            else (failed_cs, ok_cs + s.chip_seconds)
+        )
+    assert 0 < failed_cs < plan.chip_seconds  # partial failure, not all-or-nothing
+    assert q.chip_seconds == pytest.approx(plan.chip_seconds + failed_cs)
+
+
+def test_all_stages_failing_doubles_the_bill_exactly():
+    qs = [_mk(ServiceLevel.IMMEDIATE, 0.0, tokens=400_000, out=70)]
+    res = run_sim(qs, vm_mode="sos", vm_chips=32, sos_slice_chips=32,
+                  use_calibration=False, fault=FaultModel(failure_prob=1.0),
+                  sla=SLAConfig(**PIN_VM))
+    (q,) = res.queries
+    plan = CostModel(use_calibration=False).plan(q.work, 32)
+    assert q.retries == len(plan.stages)
+    # per-stage retries double each stage — NOT (n+1)x as a whole-query
+    # re-run would
+    assert q.chip_seconds == pytest.approx(2 * plan.chip_seconds)
+
+
+# ---------------------------------------------------------------------------
+# BoE fusion safety (scheduler satellite): kind + output_tokens must match
+# ---------------------------------------------------------------------------
+
+def _mini_service(fuse=True):
+    from repro.core.clusters import CostEfficientCluster
+    from repro.core.scheduler import BoEScheduler, QueryCoordinator
+
+    cm = CostModel(use_calibration=False)
+    vm = CostEfficientCluster(chips=64, mode="sos", sos_slice_chips=16,
+                              cost_model=cm)
+    cf = HighElasticCluster(cost_model=cm)
+    coord = QueryCoordinator(vm, cf, Policy.AUTO, SLAConfig())
+    return BoEScheduler(coord, SLAConfig(), fuse=fuse)
+
+
+def test_boe_fusion_never_mixes_train_and_serve():
+    boe = _mini_service()
+    serve = Query(work=QueryWork(arch="qwen2-0.5b", kind="serve",
+                                 prompt_tokens=4096, output_tokens=16),
+                  sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+    train = Query(work=QueryWork(arch="qwen2-0.5b", kind="train", batch=1,
+                                 prompt_tokens=4096, output_tokens=16,
+                                 train_steps=4),
+                  sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+    boe.enqueue(serve)
+    boe.enqueue(train)
+    (head,) = boe.poll(0.0)
+    assert head is serve and not hasattr(head, "members")
+
+
+def test_boe_fusion_requires_matching_output_tokens():
+    boe = _mini_service()
+    a = Query(work=QueryWork(arch="qwen2-0.5b", prompt_tokens=4096,
+                             output_tokens=16),
+              sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+    b = Query(work=QueryWork(arch="qwen2-0.5b", prompt_tokens=4096,
+                             output_tokens=128),
+              sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+    c = Query(work=QueryWork(arch="qwen2-0.5b", prompt_tokens=4096,
+                             output_tokens=16),
+              sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+    for q in (a, b, c):
+        boe.enqueue(q)
+    (head,) = boe.poll(0.0)
+    assert getattr(head, "members", None) == [a, c]  # b excluded
+
+
+# ---------------------------------------------------------------------------
+# determinism: same seed => identical results, with every engine feature on
+# ---------------------------------------------------------------------------
+
+def test_engine_determinism_same_seed_same_summary():
+    def go():
+        qs = generate(horizon_s=3600, seed=3)
+        return run_sim(
+            qs, vm_mode="sos", vm_chips=64, sos_slice_chips=16,
+            use_calibration=False, seed=11,
+            fault=FaultModel(failure_prob=0.05, straggler_prob=0.05),
+            sla=SLAConfig(preempt_best_effort=True, spill_enabled=True),
+        )
+
+    r1, r2 = go(), go()
+    assert r1.summary() == r2.summary()
+
+    def norm(res):  # qids are globally counted: compare relative ids
+        base = min(q.qid for q in res.queries)
+        return [(e.qid - base, e.stage, e.finish) for e in res.stage_events()]
+
+    assert norm(r1) == norm(r2)

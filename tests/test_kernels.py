@@ -16,6 +16,10 @@ from repro.kernels.ref import (
 )
 from repro.kernels.ssd_scan import ssd_scan
 
+# full Pallas sweeps run in interpret mode on CPU and dominate suite
+# time; `pytest -m "not slow"` gives the fast tier-1 signal
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 
@@ -153,7 +157,9 @@ def test_ssd_chunk_invariance():
     Cm = jax.random.normal(ks[4], (B, S, H, N)) * 0.5
     outs = [ssd_scan_ref(x, dt, A, Bm, Cm, chunk=c)[0] for c in (32, 64, 128, 256)]
     for o in outs[1:]:
-        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-4)
+        # chunk-size independent up to f32 accumulation order
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-4, rtol=1e-4)
 
 
 def test_sdpa_flash_model_integration():

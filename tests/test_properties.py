@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error, collection
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Policy, Query, QueryWork, ServiceLevel, run_sim
 from repro.core.cost_model import CostModel
@@ -60,10 +63,9 @@ _mesh = None
 def _get_mesh():
     global _mesh
     if _mesh is None:
-        _mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.launch.mesh import make_local_mesh
+
+        _mesh = make_local_mesh(1, 1)
     return _mesh
 
 
