@@ -9,6 +9,7 @@ from .clusters import (
 from .engine import ClusterExecutor, StageEvent
 from .insights import CostExplorer, export_trace, price_menu
 from .cost_model import CostModel, Stage, StagePlan
+from .pools import PoolSpec, build_pool, default_pool_specs
 from .query import Query, QueryWork
 from .scheduler import BoEScheduler, QueryCoordinator, RelaxedScheduler, ServiceLayer
 from .simulator import SimConfig, SimResult, Simulation, run_sim

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -37,17 +37,39 @@ from .sla import ServiceLevel
 @dataclass
 class AutoscaleConfig:
     """Elastic scaling of the reserved slice (the paper notes spot VMs
-    scale in minutes — modeled as a provisioning delay). Scale-out when
-    the running queue stays above the high watermark; scale-in when it
-    falls below the low watermark."""
+    scale in minutes — modeled as a provisioning delay).
+
+    Two triggers:
+      run_queue — legacy PR-1 policy: scale-out when the running queue
+                  stays above the high watermark, in below the low one.
+      backlog   — scale from the stage heap's PREDICTED remaining
+                  chip-seconds (ClusterExecutor.predicted_backlog_s)
+                  normalized to a drain time at current capacity. One
+                  huge waiting query is a large backlog long before it
+                  is a long run queue, so scale-out fires earlier and
+                  provisioning latency overlaps the work that needs it.
+    """
 
     enabled: bool = False
     min_chips: int = 4
     max_chips: int = 64
     step_chips: int = 4
     scale_delay_s: float = 180.0  # minutes-scale provisioning (paper §4.3)
+    #: releasing capacity is fast even when acquiring it is slow; None
+    #: falls back to scale_delay_s (the legacy symmetric behavior)
+    scale_in_delay_s: Optional[float] = None
+    trigger: str = "run_queue"  # run_queue | backlog
     high_watermark: int = 8  # run-queue length triggering scale-out
     low_watermark: int = 1
+    backlog_high_s: float = 120.0  # predicted drain time triggering scale-out
+    backlog_low_s: float = 10.0
+
+    def __post_init__(self):
+        if self.trigger not in ("run_queue", "backlog"):
+            raise ValueError(
+                f"unknown autoscale trigger {self.trigger!r} "
+                "(expected 'run_queue' or 'backlog')"
+            )
 
 
 @dataclass
@@ -121,9 +143,6 @@ class CostEfficientCluster(ClusterExecutor):
         self.slice_chips = sos_slice_chips
         self.hw = hw
         self.preempt_best_effort = preempt_best_effort
-        # wired by the Simulation when SLAConfig.spill_enabled:
-        self.spill_to: Optional[ClusterExecutor] = None
-        self.spill_policy: Optional[Callable[[Query, float], bool]] = None
 
     # --- POS processor-sharing dynamics ---
     def _eff_rate_per_query(self) -> float:
@@ -134,34 +153,101 @@ class CostEfficientCluster(ClusterExecutor):
             return float(self.chips)
         return (self.chips / k) / (1.0 + self.alpha * (k - 1))
 
-    def _apply_autoscale(self, now: float) -> bool:
+    def accrue_provisioned(self, now: float) -> None:
+        """Reserved-capacity accounting: chip-seconds the slice held
+        provisioned up to `now`, whether used or idle ("idle capacity is
+        paid for too"). Accrued on every admission pass regardless of
+        autoscale; callers comparing capacity footprints should call
+        this once more at the horizon end to close the tail interval."""
+        if now > self._last_prov_t:
+            self.chip_seconds_provisioned += self.chips * (now - self._last_prov_t)
+            self._last_prov_t = now
+
+    def _apply_pending_scale(self, now: float) -> bool:
+        """Apply due capacity changes BEFORE admission (new capacity can
+        admit this event's waiters); returns True when chips changed."""
+        if not self.autoscale.enabled:
+            return False
+        due = [c for t, c in self._pending_scale if t <= now]
+        if not due:
+            return False
+        changed = due[-1] != self.chips
+        self.chips = due[-1]
+        self._pending_scale = [
+            (t, c) for t, c in self._pending_scale if t > now
+        ]
+        return changed
+
+    def _schedule_autoscale(self, now: float) -> None:
+        """Evaluate the scale trigger AFTER admission, so `waiting` holds
+        only queries that genuinely found no slice this event — an
+        arriving query that a free slice admits immediately must not
+        read as backlog pressure."""
         a = self.autoscale
         if not a.enabled:
-            return False
-        # provisioned chip-seconds (idle capacity is paid for too)
-        self.chip_seconds_provisioned += self.chips * (now - self._last_prov_t)
-        self._last_prov_t = now
-        # apply due capacity changes
-        changed = False
-        due = [c for t, c in self._pending_scale if t <= now]
-        if due:
-            changed = due[-1] != self.chips
-            self.chips = due[-1]
-            self._pending_scale = [
-                (t, c) for t, c in self._pending_scale if t > now
-            ]
+            return
+        if a.trigger == "backlog":
+            drain = self.drain_time_s(now)
+            # scale out only when queued work exists — a long RUNNING
+            # stage inflates the backlog but new slices can't help it —
+            # and never scale IN over the head of a queue
+            hot = drain >= a.backlog_high_s and bool(self.waiting)
+            cold = drain <= a.backlog_low_s and not self.waiting
+        else:
+            hot = self.run_queue_len >= a.high_watermark
+            cold = self.run_queue_len <= a.low_watermark
         target = None
-        if self.run_queue_len >= a.high_watermark and self.chips < a.max_chips:
+        if hot and self.chips < a.max_chips:
             target = min(a.max_chips, self.chips + a.step_chips)
-        elif self.run_queue_len <= a.low_watermark and self.chips > a.min_chips:
+        elif cold and self.chips > a.min_chips:
             target = max(a.min_chips, self.chips - a.step_chips)
         if target is not None and not self._pending_scale:
-            self._pending_scale.append((now + a.scale_delay_s, target))
-        return changed
+            delay = (
+                a.scale_delay_s
+                if target > self.chips
+                else (
+                    a.scale_in_delay_s
+                    if a.scale_in_delay_s is not None
+                    else a.scale_delay_s
+                )
+            )
+            self._pending_scale.append((now + delay, target))
 
     # --- engine hooks -------------------------------------------------
     def _plan_chips(self, q: Query) -> int:
         return self.chips if self.mode == "pos" else self.slice_chips
+
+    # --- placement interface ------------------------------------------
+    def has_capacity(self) -> bool:
+        if self.waiting:
+            return False
+        if self.mode == "pos":
+            return len(self.running) < self.max_concurrent
+        return (len(self.running) + 1) * self.slice_chips <= self.chips
+
+    def _run_remaining_cs(self, run: _Run, now) -> float:
+        elapsed = 0.0 if now is None else max(now - run.last_update, 0.0)
+        left = max(run.remaining - elapsed * run.rate, 0.0)
+        if self.mode == "pos":
+            return left  # POS work units ARE chip-seconds
+        return left * run.chips  # SOS: wall-seconds on an isolated slice
+
+    def drain_time_s(self, now=None) -> float:
+        return self.predicted_backlog_s(now) / max(self.chips, 1)
+
+    def quote(self, q: Query, now=None) -> dict:
+        plan = self.cost_model.plan(q.work, self.effective_chips(q))
+        exec_s = plan.remaining_time(q.stage_cursor)
+        if self.mode == "pos":
+            # PS: joining k runners divides the slice and adds the
+            # concurrency interference penalty
+            k = self.run_queue_len + 1
+            latency = exec_s * k * (1.0 + self.alpha * (k - 1))
+        else:
+            # SOS: deterministic slice time + predicted wait for a slice
+            wait = 0.0 if self.has_capacity() else self.drain_time_s(now)
+            latency = wait + exec_s
+        return {"latency_s": latency, "cost": self.quote_cost(q)}
 
     def _run_rate(self, run: _Run) -> float:
         if self.mode == "pos":
@@ -203,7 +289,8 @@ class CostEfficientCluster(ClusterExecutor):
         return self.waiting.pop(best)
 
     def _admit(self, now: float) -> None:
-        if self._apply_autoscale(now):
+        self.accrue_provisioned(now)
+        if self._apply_pending_scale(now):
             self._rates_changed(now)
         if self.mode == "pos":
             admitted = False
@@ -212,12 +299,14 @@ class CostEfficientCluster(ClusterExecutor):
                 admitted = True
             if admitted:
                 self._rates_changed(now)
+            self._schedule_autoscale(now)
             return
         # SOS: fixed-size isolated slices
         used = len(self.running) * self.slice_chips
         while self.waiting and used + self.slice_chips <= self.chips:
             self._start_run(self._pop_waiting(), now)
             used += self.slice_chips
+        self._schedule_autoscale(now)
         # stage-boundary preemption: a waiting IMMEDIATE query may bump a
         # running BEST_EFFORT query at its next stage boundary; requests
         # are re-derived from the CURRENT waiting queue each admission so
@@ -251,16 +340,8 @@ class CostEfficientCluster(ClusterExecutor):
             q.state = "preempted"
             self.waiting.append(q)  # resumes at stage_cursor on a free slice
             return False
-        if (
-            self.spill_to is not None
-            and self.spill_policy is not None
-            and self.spill_policy(q, now)
-        ):
-            q.spilled = True
-            q.state = "spilled"
-            self.spill_to.submit(q, now)  # remaining stages at elastic rate
-            return False
-        return True
+        # coordinator-owned re-placement (spill to an elastic pool)
+        return super()._continue_run(run, now)
 
 
 class HighElasticCluster(ClusterExecutor):
@@ -268,6 +349,7 @@ class HighElasticCluster(ClusterExecutor):
     `elastic_price_multiplier`x unit price (paper's CF: 9-24x)."""
 
     name = "cf"
+    pool_kind = "elastic"
 
     def __init__(
         self,
@@ -306,6 +388,9 @@ class HighElasticCluster(ClusterExecutor):
 
     def _plan_chips(self, q: Query) -> int:
         return self.slice_for(q)
+
+    def _queue_delay_estimate(self, q: Query, now) -> float:
+        return self.startup_s
 
     def _admit(self, now: float) -> None:
         # unbounded burst capacity: everything starts after provisioning

@@ -13,7 +13,7 @@ from __future__ import annotations
 import json
 import math
 from dataclasses import dataclass, field
-from functools import lru_cache
+from functools import cached_property, lru_cache
 from pathlib import Path
 from typing import Optional
 
@@ -42,18 +42,35 @@ class StagePlan:
 
     @property
     def exec_time(self) -> float:
-        return sum(s.time_s for s in self.stages)
+        return self._suffix_time[0]
 
     @property
     def chip_seconds(self) -> float:
-        return sum(s.chip_seconds for s in self.stages)
+        return self._suffix_cs[0]
+
+    # suffix sums make every remaining-* view O(1): the backlog signal
+    # and the coordinator's quotes call them per query per event, and
+    # chunked decode gives long generations hundreds of stages
+    @cached_property
+    def _suffix_time(self) -> tuple[float, ...]:
+        acc = [0.0]
+        for s in reversed(self.stages):
+            acc.append(acc[-1] + s.time_s)
+        return tuple(reversed(acc))
+
+    @cached_property
+    def _suffix_cs(self) -> tuple[float, ...]:
+        acc = [0.0]
+        for s in reversed(self.stages):
+            acc.append(acc[-1] + s.chip_seconds)
+        return tuple(reversed(acc))
 
     # --- stage-cursor views (engine.py runs a query as a cursor) ------
     def remaining_time(self, cursor: int = 0) -> float:
-        return sum(s.time_s for s in self.stages[cursor:])
+        return self._suffix_time[min(cursor, len(self.stages))]
 
     def remaining_chip_seconds(self, cursor: int = 0) -> float:
-        return sum(s.chip_seconds for s in self.stages[cursor:])
+        return self._suffix_cs[min(cursor, len(self.stages))]
 
 
 @lru_cache(maxsize=None)
@@ -115,20 +132,28 @@ class CostModel:
     disables chunking): long generations become a chain of short stages,
     so they are preemptible at chunk boundaries and a fault retries only
     the failed chunk. Plan STRUCTURE depends only on the work (never on
-    `chips`), so a mid-plan stage cursor stays valid when the remaining
-    stages are re-planned for a different slice size (cross-cluster
-    spill, preemption resume).
+    `chips` or ``speed_factor``), so a mid-plan stage cursor stays valid
+    when the remaining stages are re-planned for a different slice size
+    or a different pool (cross-pool spill, spill-back, preemption resume).
+
+    ``speed_factor`` models heterogeneous pool hardware relative to the
+    `hw` baseline: a 0.25x pool (e.g. CPU spot) runs every stage 4x
+    longer — and bills 4x the chip-seconds — on the same plan structure.
     """
 
     def __init__(self, hw: HwSpec = V5E, use_calibration: bool = True,
-                 decode_chunk_tokens: int = 32):
+                 decode_chunk_tokens: int = 32, speed_factor: float = 1.0):
+        if speed_factor <= 0:
+            raise ValueError(f"speed_factor must be > 0, got {speed_factor}")
         self.hw = hw
         self.use_calibration = use_calibration
         self.decode_chunk_tokens = decode_chunk_tokens
+        self.speed_factor = speed_factor
         self._plan_cache: dict[tuple, StagePlan] = {}
 
     def _cal(self, arch: str, kind: str) -> float:
-        return _calibration(arch, kind) if self.use_calibration else 1.0
+        cal = _calibration(arch, kind) if self.use_calibration else 1.0
+        return cal / self.speed_factor
 
     def plan(self, work: QueryWork, chips: int) -> StagePlan:
         key = (work.arch, work.kind, work.batch, work.prompt_tokens,

@@ -30,7 +30,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -85,9 +85,20 @@ class ClusterExecutor:
     (slice sizing) and may override ``_stage_work`` (fault sampling),
     ``_run_rate``/``_rates_changed`` (processor sharing) and
     ``_continue_run`` (stage-boundary preemption/spill policy).
+
+    As a POOL in the coordinator's registry, an executor also answers
+    placement questions: ``quote(q)`` prices the query's remaining
+    stages at the pool's current load, ``predicted_backlog_s`` sums the
+    chip-seconds already committed to the pool (the backlog-driven
+    autoscale signal), and ``rehome`` — wired by the coordinator — may
+    move a query to another pool at any stage boundary (spill,
+    spill-back).
     """
 
     name = "?"
+    #: "reserved" pools are bounded and cheap (the cost-efficient tier);
+    #: "elastic" pools are unbounded burst capacity at a premium price.
+    pool_kind = "reserved"
 
     def __init__(
         self,
@@ -106,6 +117,9 @@ class ClusterExecutor:
         self._heap: list[tuple[float, int, _Run, int]] = []
         self._seq = itertools.count()
         self.stages_completed = 0
+        #: stage-boundary re-placement hook, wired by the coordinator:
+        #: (query, now) -> target pool, or None to keep the query here
+        self.rehome: Optional[Callable[[Query, float], Optional["ClusterExecutor"]]] = None
 
     # --- queue state the coordinator watches -------------------------
     @property
@@ -115,6 +129,83 @@ class ClusterExecutor:
     @property
     def idle(self) -> bool:
         return self.run_queue_len == 0
+
+    # --- placement interface (the coordinator's registry view) -------
+    def effective_chips(self, q: Query) -> int:
+        """The slice size EVERY planning path uses for this query on this
+        pool — quotes, spill thresholds, and execution must all plan with
+        the same chips, so they share this one accessor."""
+        return self._plan_chips(q)
+
+    def has_capacity(self) -> bool:
+        """Whether a newly submitted query would start immediately."""
+        return True
+
+    def _queue_delay_estimate(self, q: Query, now: Optional[float]) -> float:
+        """Estimated wait before the query's first remaining stage runs."""
+        return 0.0
+
+    def quote_cost(self, q: Query) -> float:
+        """The cost half of `quote` alone — O(1), no queue-state walk.
+        Placement paths that only compare prices use this so a saturated
+        pool's backlog walk is never computed just to be discarded."""
+        plan = self.cost_model.plan(q.work, self.effective_chips(q))
+        return plan.remaining_chip_seconds(q.stage_cursor) * self.price_per_chip_s
+
+    def quote(self, q: Query, now: Optional[float] = None) -> dict:
+        """Latency/cost quote for the query's REMAINING stages
+        (q.stage_cursor onward) at the pool's current load. A preempted
+        or spill-candidate query is priced for what's left, never for
+        work it already ran."""
+        plan = self.cost_model.plan(q.work, self.effective_chips(q))
+        return {
+            "latency_s": self._queue_delay_estimate(q, now)
+            + plan.remaining_time(q.stage_cursor),
+            "cost": self.quote_cost(q),
+        }
+
+    def _run_remaining_cs(self, run: _Run, now: Optional[float]) -> float:
+        """Chip-seconds left in the run's CURRENT stage (base: work is
+        wall-seconds at rate 1 on an isolated slice of `run.chips`)."""
+        elapsed = 0.0 if now is None else max(now - run.last_update, 0.0)
+        return max(run.remaining - elapsed * run.rate, 0.0) * run.chips
+
+    def predicted_backlog_s(self, now: Optional[float] = None) -> float:
+        """Predicted chip-seconds committed to this pool: the running
+        stages' remaining work (the same predictions the stage heap
+        holds), every running query's unstarted stages, and every
+        waiting query's remaining plan. This is the backlog-driven
+        autoscale signal — a single huge waiting query is a large
+        backlog long before it is a long run queue."""
+        total = 0.0
+        for run in self.running:
+            total += self._run_remaining_cs(run, now)
+            total += run.plan.remaining_chip_seconds(run.query.stage_cursor + 1)
+        for q in self.waiting:
+            plan = self.cost_model.plan(q.work, self._plan_chips(q))
+            total += plan.remaining_chip_seconds(q.stage_cursor)
+        return total
+
+    def drain_time_s(self, now: Optional[float] = None) -> float:
+        """Seconds to drain the predicted backlog at current capacity
+        (elastic pools drain in parallel: effectively zero)."""
+        return 0.0
+
+    def check_heap_invariant(self) -> None:
+        """Test/debug hook: every running stage has exactly one VALID
+        heap entry, and no valid entry refers to a retired run."""
+        valid: dict[int, int] = {}
+        for _, _, run, epoch in self._heap:
+            if run.active and epoch == run.epoch:
+                valid[id(run)] = valid.get(id(run), 0) + 1
+        running_ids = {id(r) for r in self.running}
+        assert set(valid) == running_ids, (
+            f"{self.name}: valid heap entries {len(valid)} != "
+            f"running {len(running_ids)}"
+        )
+        assert all(v == 1 for v in valid.values()), (
+            f"{self.name}: duplicate valid heap entries: {valid}"
+        )
 
     # --- subclass hooks ----------------------------------------------
     def _admit(self, now: float) -> None:
@@ -143,8 +234,30 @@ class ClusterExecutor:
 
     def _continue_run(self, run: _Run, now: float) -> bool:
         """Stage-boundary policy: return False to withhold the next stage
-        (the run is retired; the query was re-routed or re-queued)."""
-        return True
+        (the run is retired; the query was re-routed or re-queued).
+        Base behavior: ask the coordinator's `rehome` hook whether the
+        query should continue on another pool — a reserved pool spills
+        to an elastic one under overload, an elastic pool hands a
+        spilled query back once the reserved backlog clears."""
+        if self.rehome is None:
+            return True
+        target = self.rehome(run.query, now)
+        if target is None or target is self:
+            return True
+        self._handoff(run.query, target, now)
+        return False
+
+    def _handoff(self, q: Query, target: "ClusterExecutor", now: float) -> None:
+        """Move a query to another pool at a stage boundary. The stage
+        cursor stays valid because plan STRUCTURE is pool-independent;
+        remaining stages are re-planned (and re-priced) on the target."""
+        if target.pool_kind == "elastic" and self.pool_kind == "reserved":
+            q.spilled = True
+            q.state = "spilled"
+        else:
+            q.spill_backs += 1
+            q.state = "spilled-back"
+        target.submit(q, now)
 
     # --- heap machinery ----------------------------------------------
     def _push(self, run: _Run, now: float) -> None:

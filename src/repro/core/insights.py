@@ -159,6 +159,7 @@ def export_trace(queries: Iterable[Query], path: str) -> int:
                 "stages": len(q.stage_trace),
                 "preemptions": q.preemptions,
                 "spilled": q.spilled,
+                "spill_backs": q.spill_backs,
             }) + "\n")
             n += 1
     return n

@@ -1,0 +1,164 @@
+"""N-pool executor registry: pool specs and the builder that turns them
+into ClusterExecutors.
+
+The paper's flexible-SLA argument (and Kassing et al.'s allocation
+study) is that the cost/latency frontier is traced by CHOOSING among
+heterogeneous resource pools per query — a reserved slice, elastic burst
+capacity, cheap-but-slow spot capacity — each with its own price, speed,
+startup latency, and capacity model. ``PoolSpec`` captures exactly those
+axes declaratively; ``build_pool`` instantiates the matching executor:
+
+  kind="reserved" -> CostEfficientCluster (bounded POS/SOS slice pool,
+                     optional autoscale)
+  kind="elastic"  -> HighElasticCluster (unbounded burst slices with a
+                     provisioning delay, premium unit price)
+
+Pool heterogeneity enters the cost model as a ``speed_factor`` relative
+to the hardware baseline: a 0.25x pool (CPU spot) runs every stage 4x
+longer on the SAME plan structure, so a query's stage cursor stays valid
+when its remaining stages hop pools (spill, spill-back) — only times and
+bills are re-derived.
+
+The default registry (``default_pool_specs``) is the paper's vm/cf pair
+built from the legacy SimConfig knobs, so a registry of those two specs
+reproduces the PR-1 simulator bit-for-bit, and a registry of size one
+degenerates to a single-cluster system.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..perf.hw import V5E, HwSpec
+from .clusters import (
+    AutoscaleConfig,
+    CostEfficientCluster,
+    FaultModel,
+    HighElasticCluster,
+)
+from .cost_model import CostModel
+from .engine import ClusterExecutor
+from .sla import SLAConfig
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    """Declarative description of one executor pool in the registry."""
+
+    name: str
+    kind: str = "reserved"  # reserved | elastic
+    #: reserved: total slice capacity; elastic: max chips per burst slice
+    chips: int = 64
+    mode: str = "sos"  # reserved execution: pos | sos
+    slice_chips: int = 16  # SOS isolated sub-slice size
+    #: pool hardware speed relative to the hw baseline (0.25 = 4x slower)
+    speed_factor: float = 1.0
+    #: absolute $/chip-hour; None derives hw.reserved_price * multiplier
+    price_per_chip_hour: Optional[float] = None
+    price_multiplier: float = 1.0
+    startup_s: float = 0.0  # provisioning delay (elastic pools)
+    interference_alpha: float = 0.5  # POS processor-sharing penalty
+    max_concurrent: int = 8  # POS admission cap
+    min_chips: int = 4  # elastic: min chips per burst slice
+    tokens_per_chip: int = 262_144  # elastic slice sizing
+    autoscale: Optional[AutoscaleConfig] = None  # reserved pools only
+    #: None follows SLAConfig.preempt_best_effort; a bool overrides it
+    preempt_best_effort: Optional[bool] = None
+
+    def price_chip_hour(self, hw: HwSpec = V5E) -> float:
+        if self.price_per_chip_hour is not None:
+            return self.price_per_chip_hour
+        return hw.reserved_price * self.price_multiplier
+
+
+def build_pool(
+    spec: PoolSpec,
+    *,
+    hw: HwSpec = V5E,
+    use_calibration: bool = True,
+    decode_chunk_tokens: int = 32,
+    fault: Optional[FaultModel] = None,
+    rng: Optional[np.random.Generator] = None,
+    sla: Optional[SLAConfig] = None,
+) -> ClusterExecutor:
+    """Instantiate the executor a PoolSpec describes. All pools built for
+    one simulation share `rng` so fault sampling stays deterministic for
+    a given seed regardless of how queries hop between pools."""
+    sla = sla or SLAConfig()
+    cm = CostModel(
+        hw=hw,
+        use_calibration=use_calibration,
+        decode_chunk_tokens=decode_chunk_tokens,
+        speed_factor=spec.speed_factor,
+    )
+    if spec.kind == "elastic":
+        pool: ClusterExecutor = HighElasticCluster(
+            cost_model=cm,
+            hw=hw,
+            startup_s=spec.startup_s,
+            min_chips=spec.min_chips,
+            max_chips=spec.chips,
+            tokens_per_chip=spec.tokens_per_chip,
+            fault=fault,
+            rng=rng,
+        )
+    elif spec.kind == "reserved":
+        preempt = (
+            sla.preempt_best_effort
+            if spec.preempt_best_effort is None
+            else spec.preempt_best_effort
+        )
+        pool = CostEfficientCluster(
+            chips=spec.chips,
+            mode=spec.mode,
+            max_concurrent=spec.max_concurrent,
+            interference_alpha=spec.interference_alpha,
+            sos_slice_chips=spec.slice_chips,
+            cost_model=cm,
+            hw=hw,
+            fault=fault,
+            rng=rng,
+            autoscale=spec.autoscale,
+            preempt_best_effort=preempt,
+        )
+    else:
+        raise ValueError(f"unknown pool kind {spec.kind!r} for {spec.name!r}")
+    pool.name = spec.name
+    pool.price_per_chip_s = spec.price_chip_hour(hw) / 3600.0
+    pool.spec = spec  # type: ignore[attr-defined]
+    return pool
+
+
+def default_pool_specs(
+    *,
+    vm_chips: int = 4,
+    vm_mode: str = "pos",
+    interference_alpha: float = 0.5,
+    sos_slice_chips: int = 32,
+    cf_startup_s: float = 2.0,
+    elastic_price_multiplier: float = 10.0,
+    autoscale: Optional[AutoscaleConfig] = None,
+) -> list[PoolSpec]:
+    """The paper's two-pool system (reserved VM + elastic CF) as a
+    registry — the SimConfig default, bit-for-bit the PR-1 simulator."""
+    return [
+        PoolSpec(
+            name="vm",
+            kind="reserved",
+            chips=vm_chips,
+            mode=vm_mode,
+            slice_chips=sos_slice_chips,
+            interference_alpha=interference_alpha,
+            autoscale=autoscale,
+        ),
+        PoolSpec(
+            name="cf",
+            kind="elastic",
+            chips=64,
+            min_chips=4,
+            startup_s=cf_startup_s,
+            price_multiplier=elastic_price_multiplier,
+        ),
+    ]

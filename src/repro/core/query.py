@@ -58,9 +58,10 @@ class Query:
     # cursor over its StagePlan; the cursor survives preemption and
     # cross-cluster spill, so completed stages are never re-run.
     stage_cursor: int = 0  # next stage index to execute
-    state: str = "pending"  # pending|running|preempted|spilled|done
+    state: str = "pending"  # pending|running|preempted|spilled|spilled-back|done
     preemptions: int = 0
     spilled: bool = False
+    spill_backs: int = 0  # returns from an elastic pool to a reserved one
     stage_trace: list = field(default_factory=list)  # StageEvent records
 
     @property

@@ -1,16 +1,19 @@
 """The paper's scheduling layer (§4.2 service levels, §4.3 coordinator).
 
 Service layer -> {immediate path, relaxed pending queue, BoE pending queue}
--> schedulers poll -> query coordinator routes to the cost-efficient (VM)
-or high-elastic (CF) cluster under the Force/Auto policy.
+-> schedulers poll -> query coordinator places each query on one pool of
+an N-pool executor registry, by per-pool remaining-stage quotes under the
+Force/Auto/latency-aware policy. The registry generalizes the paper's
+hardcoded vm/cf pair: "reserved" pools form the cost-efficient tier,
+"elastic" pools the premium burst tier, and every placement decision —
+routing, spill, spill-back — is made from the same quotes.
 """
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Iterable, Optional, Union
 
-from .clusters import CostEfficientCluster, HighElasticCluster
+from .engine import ClusterExecutor
 from .query import Query, QueryWork
 from .sla import Policy, ServiceLevel, SLAConfig
 
@@ -67,95 +70,195 @@ def pop_fused(queue: deque, now: float, fuse: bool, fuse_max: int) -> Query:
 
 
 class QueryCoordinator:
-    """Routes a dequeued query to a cluster (paper §4.3)."""
+    """Places a dequeued query on one pool of the registry (paper §4.3,
+    generalized): every decision reads per-pool remaining-stage quotes,
+    not a hardcoded vm/cf branch.
+
+    Accepts either a pool list or the legacy ``(vm, cf)`` pair. The
+    first reserved pool is exposed as ``.vm`` and the first elastic pool
+    as ``.cf`` for the two-pool system the paper describes.
+    """
 
     def __init__(
         self,
-        vm: CostEfficientCluster,
-        cf: HighElasticCluster,
-        policy: Policy,
-        cfg: SLAConfig,
+        pools: Union[ClusterExecutor, Iterable[ClusterExecutor]],
+        cf: Optional[ClusterExecutor] = None,
+        policy: Policy = Policy.AUTO,
+        cfg: Optional[SLAConfig] = None,
     ):
-        self.vm = vm
-        self.cf = cf
+        if isinstance(pools, ClusterExecutor):
+            pools = [pools] + ([cf] if cf is not None else [])
+        elif cf is not None:
+            raise TypeError("pass either a pool list or the (vm, cf) pair")
+        self.pools: list[ClusterExecutor] = list(pools)
+        if not self.pools:
+            raise ValueError("registry needs at least one pool")
+        names = [p.name for p in self.pools]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate pool names: {names}")
+        self.by_name = {p.name: p for p in self.pools}
         self.policy = policy
-        self.cfg = cfg
+        self.cfg = cfg or SLAConfig()
+        self.reserved_pools = [
+            p for p in self.pools if p.pool_kind == "reserved"
+        ]
+        self.elastic_pools = [p for p in self.pools if p.pool_kind == "elastic"]
+        self.vm = self.reserved_pools[0] if self.reserved_pools else self.pools[0]
+        self.cf = self.elastic_pools[0] if self.elastic_pools else None
+
+    def pool_overloaded(self, pool: ClusterExecutor) -> bool:
+        return pool.run_queue_len >= self.cfg.vm_overload_threshold
 
     @property
     def vm_overloaded(self) -> bool:
-        return self.vm.run_queue_len >= self.cfg.vm_overload_threshold
+        """The legacy single-VM overload signal the schedulers poll:
+        EVERY reserved pool is past the overload threshold. An
+        all-elastic registry is never overloaded — burst capacity is
+        unbounded, so holding relaxed queries back would only invert
+        priority against BoE, which drains freely."""
+        if not self.reserved_pools:
+            return False
+        return all(self.pool_overloaded(p) for p in self.reserved_pools)
+
+    @property
+    def reserved_min_queue_len(self) -> int:
+        """Shortest run queue across the cost-efficient tier (the BoE
+        drain signal; with one reserved pool: its run-queue length)."""
+        if not self.reserved_pools:
+            return 0
+        return min(p.run_queue_len for p in self.reserved_pools)
 
     # ------------------------------------------------------------------
     # Beyond-paper: execution-time SLAs. The deterministic SOS cost model
     # makes admission-time latency quotes possible (paper §3.3 vision 1:
     # "it is easier to profile and control the performance and cost").
     # ------------------------------------------------------------------
-    def estimate(self, q: Query) -> dict:
-        """Latency/cost quote for both pools at the current load. Quotes
+    def estimate(self, q: Query, now: Optional[float] = None) -> dict:
+        """Latency/cost quote for EVERY pool at the current load. Quotes
         cover only the REMAINING stages (q.stage_cursor onward), so a
         preempted or spill-candidate query is priced for what's left,
         not for work it already ran."""
-        cm = self.vm.cost_model
-        cur = q.stage_cursor
-        vm_plan = cm.plan(q.work, self.vm.chips)
-        vm_exec = vm_plan.remaining_time(cur)
-        # POS: effective rate divides across running queries w/ interference
-        k = self.vm.run_queue_len + 1
-        vm_latency = vm_exec * k * (1.0 + self.vm.alpha * (k - 1))
-        vm_cost = vm_plan.remaining_chip_seconds(cur) * self.vm.price_per_chip_s
-        cf_plan = cm.plan(q.work, self.cf.slice_for(q))
-        cf_latency = self.cf.startup_s + cf_plan.remaining_time(cur)
-        cf_cost = cf_plan.remaining_chip_seconds(cur) * self.cf.price_per_chip_s
-        return {
-            "vm": {"latency_s": vm_latency, "cost": vm_cost},
-            "cf": {"latency_s": cf_latency, "cost": cf_cost},
-        }
+        return {p.name: p.quote(q, now) for p in self.pools}
 
-    def should_spill(self, q: Query, now: float) -> bool:
+    def should_spill(
+        self, q: Query, now: float, pool: Optional[ClusterExecutor] = None
+    ) -> bool:
         """Stage-boundary spill policy (SLAConfig.spill_enabled): move the
-        remaining stages of a running VM query to the elastic cluster
-        when its slice pool is overloaded — a waiting query AT LEAST AS
-        urgent as `q` has no slice — and the remaining work is worth the
-        elastic premium. A less-urgent waiter never displaces a runner
-        (a deadline-distant RELAXED query must not push an IMMEDIATE
-        query onto the 9-24x-priced pool), and BEST_EFFORT queries are
-        never spilled — they are preempted instead."""
+        remaining stages of a running reserved-pool query to an elastic
+        pool when its slice pool is overloaded — a waiting query AT LEAST
+        AS urgent as `q` has no slice — and the remaining work is worth
+        the elastic premium. A less-urgent waiter never displaces a
+        runner (a deadline-distant RELAXED query must not push an
+        IMMEDIATE query onto the 9-24x-priced pool), and BEST_EFFORT
+        queries are never spilled — they are preempted instead."""
+        pool = pool or self.vm
         if q.current_sla is ServiceLevel.BEST_EFFORT:
             return False
         displacing_waiter = any(
             w.current_sla is not ServiceLevel.BEST_EFFORT
             and w.current_sla <= q.current_sla
-            for w in self.vm.waiting
+            for w in pool.waiting
         )
         if not displacing_waiter:
             return False
-        plan = self.vm.cost_model.plan(q.work, self.vm.slice_chips)
+        plan = pool.cost_model.plan(q.work, pool.effective_chips(q))
         return plan.remaining_time(q.stage_cursor) >= self.cfg.spill_min_remaining_s
+
+    def rehome(
+        self, pool: ClusterExecutor, q: Query, now: float
+    ) -> Optional[ClusterExecutor]:
+        """Stage-boundary re-placement for `pool` (wired as pool.rehome).
+
+        Reserved pool: spill — under overload, hand the remaining stages
+        to the cheapest elastic quote. Elastic pool: spill-back — once a
+        reserved pool has a free slice and its predicted backlog drain
+        time is below the low watermark, a spilled query returns at its
+        next stage boundary, making spill symmetric. Both moves require
+        the remaining work to be worth the hop (spill_min_remaining_s),
+        and the watermark hysteresis (spill needs a displaced waiter,
+        spill-back an EMPTY queue plus low backlog) prevents ping-pong."""
+        if pool.pool_kind == "reserved":
+            if not self.cfg.spill_enabled or not self.elastic_pools:
+                return None
+            if not self.should_spill(q, now, pool):
+                return None
+            return min(self.elastic_pools, key=lambda p: p.quote_cost(q))
+        # elastic pool: symmetric spill-back
+        if not (self.cfg.spill_back_enabled and q.spilled):
+            return None
+        eligible = []
+        for p in self.reserved_pools:
+            if not p.has_capacity():
+                continue
+            if p.drain_time_s(now) > self.cfg.spill_back_low_backlog_s:
+                continue
+            plan = p.cost_model.plan(q.work, p.effective_chips(q))
+            if plan.remaining_time(q.stage_cursor) < self.cfg.spill_min_remaining_s:
+                continue  # the last chunk is not worth the hop
+            eligible.append(p)
+        if not eligible:
+            return None
+        # pick by quote, like every other placement decision: an
+        # IMMEDIATE query returns to the fastest eligible pool, lower
+        # levels to the cheapest — never registry order, which could
+        # drop a latency-SLA query onto a 4x-slower pool
+        if q.current_sla is ServiceLevel.IMMEDIATE:
+            return min(eligible, key=lambda p: p.quote(q, now)["latency_s"])
+        return min(eligible, key=lambda p: p.quote_cost(q))
+
+    def wire_rehoming(self) -> None:
+        """Install the stage-boundary re-placement hook on every pool the
+        active SLAConfig makes eligible (reserved pools when spill is on,
+        elastic pools when spill-back is on)."""
+        for pool in self.pools:
+            eligible = (
+                self.cfg.spill_enabled
+                if pool.pool_kind == "reserved"
+                else self.cfg.spill_back_enabled
+            )
+            if eligible:
+                pool.rehome = (
+                    lambda q, now, _pool=pool: self.rehome(_pool, q, now)
+                )
 
     def route(self, q: Query, now: float) -> str:
         sla = q.current_sla
         if self.policy is Policy.LATENCY_AWARE:
-            est = self.estimate(q)
+            est = self.estimate(q, now)
             target = q.latency_target_s
             ok = {
-                pool: e for pool, e in est.items()
+                name: e for name, e in est.items()
                 if target is None or e["latency_s"] <= target
             } or est  # nothing meets the target: best effort, cheapest
-            target_pool = min(ok, key=lambda p: ok[p]["cost"])
-            (self.vm if target_pool == "vm" else self.cf).submit(q, now)
-            return target_pool
-        if self.policy is Policy.FORCE:
-            # SLA directly decides the pool: relaxed/BoE are forced into
-            # the cost-efficient cluster; immediate spills to the elastic
-            # cluster only when the VM cluster is overloaded.
-            if sla in (ServiceLevel.RELAXED, ServiceLevel.BEST_EFFORT):
-                target = "vm"
+            pool = self.by_name[min(ok, key=lambda n: ok[n]["cost"])]
+        else:
+            open_reserved = [
+                p for p in self.reserved_pools if not self.pool_overloaded(p)
+            ]
+            if self.policy is Policy.FORCE and sla in (
+                ServiceLevel.RELAXED,
+                ServiceLevel.BEST_EFFORT,
+            ):
+                # SLA directly decides the tier: relaxed/BoE are forced
+                # onto the cost-efficient tier even under overload
+                candidates = open_reserved or self.reserved_pools
             else:
-                target = "cf" if self.vm_overloaded else "vm"
-        else:  # AUTO: overload decides, regardless of service level
-            target = "cf" if self.vm_overloaded else "vm"
-        (self.vm if target == "vm" else self.cf).submit(q, now)
-        return target
+                # immediate (FORCE) and everything (AUTO): overflow to
+                # the elastic tier only when the reserved tier is full
+                candidates = (
+                    open_reserved or self.elastic_pools or self.reserved_pools
+                )
+            candidates = candidates or self.pools  # all-elastic registry
+            # quote only the candidate tier (a saturated pool's backlog
+            # walk is pure waste when it is not a candidate anyway)
+            if len(candidates) == 1:
+                pool = candidates[0]
+            elif sla is ServiceLevel.IMMEDIATE:
+                pool = min(candidates, key=lambda p: p.quote(q, now)["latency_s"])
+            else:
+                pool = min(candidates, key=lambda p: p.quote_cost(q))
+        pool.submit(q, now)
+        return pool.name
 
 
 class RelaxedScheduler:
@@ -207,7 +310,7 @@ class BoEScheduler:
 
     def poll(self, now: float) -> list[Query]:
         out = []
-        while self.q and self.coordinator.vm.run_queue_len <= self.cfg.boe_idle_threshold:
+        while self.q and self.coordinator.reserved_min_queue_len <= self.cfg.boe_idle_threshold:
             head = pop_fused(self.q, now, self.fuse, self.fuse_max)
             head.dequeue_time = now
             self.coordinator.route(head, now)

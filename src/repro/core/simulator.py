@@ -21,14 +21,9 @@ from typing import Iterable, Optional
 
 import numpy as np
 
-from .clusters import (
-    AutoscaleConfig,
-    CostEfficientCluster,
-    FaultModel,
-    HighElasticCluster,
-)
-from .cost_model import CostModel
+from .clusters import AutoscaleConfig, FaultModel
 from .engine import StageEvent
+from .pools import PoolSpec, build_pool, default_pool_specs
 from .query import Query
 from .scheduler import QueryCoordinator, ServiceLayer
 from .sla import Policy, ServiceLevel, SLAConfig
@@ -54,6 +49,10 @@ class SimConfig:
     #: decode stages are chunked to at most this many tokens, making long
     #: generations preemptible/retryable at chunk granularity (0 = off)
     decode_chunk_tokens: int = 32
+    #: executor registry: a list of PoolSpecs, one pool each. None builds
+    #: the paper's vm/cf pair from the legacy knobs above — bit-for-bit
+    #: the PR-1 two-cluster simulator.
+    pools: Optional[list[PoolSpec]] = None
 
 
 @dataclass
@@ -132,6 +131,7 @@ class SimResult:
             "stages": sum(len(q.stage_trace) for q in self.queries),
             "preemptions": sum(q.preemptions for q in self.queries),
             "spilled": sum(q.spilled for q in self.queries),
+            "spill_backs": sum(q.spill_backs for q in self.queries),
             "retries": sum(q.retries for q in self.queries),
         }
 
@@ -140,29 +140,36 @@ class Simulation:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
         rng = np.random.default_rng(cfg.seed)
-        cm = CostModel(
-            use_calibration=cfg.use_calibration,
-            decode_chunk_tokens=cfg.decode_chunk_tokens,
+        specs = cfg.pools
+        if specs is None:
+            specs = default_pool_specs(
+                vm_chips=cfg.vm_chips,
+                vm_mode=cfg.vm_mode,
+                interference_alpha=cfg.interference_alpha,
+                sos_slice_chips=cfg.sos_slice_chips,
+                cf_startup_s=cfg.cf_startup_s,
+                elastic_price_multiplier=cfg.elastic_price_multiplier,
+                autoscale=cfg.autoscale,
+            )
+        # all pools share one rng: fault sampling depends only on the
+        # seed and the stage execution order, not on pool membership
+        self.pools = [
+            build_pool(
+                spec,
+                use_calibration=cfg.use_calibration,
+                decode_chunk_tokens=cfg.decode_chunk_tokens,
+                fault=cfg.fault,
+                rng=rng,
+                sla=cfg.sla,
+            )
+            for spec in specs
+        ]
+        self.coordinator = QueryCoordinator(
+            self.pools, policy=cfg.policy, cfg=cfg.sla
         )
-        self.vm = CostEfficientCluster(
-            chips=cfg.vm_chips,
-            mode=cfg.vm_mode,
-            interference_alpha=cfg.interference_alpha,
-            sos_slice_chips=cfg.sos_slice_chips,
-            cost_model=cm,
-            fault=cfg.fault,
-            rng=rng,
-            autoscale=cfg.autoscale,
-            preempt_best_effort=cfg.sla.preempt_best_effort,
-        )
-        self.cf = HighElasticCluster(
-            cost_model=cm, startup_s=cfg.cf_startup_s, fault=cfg.fault, rng=rng,
-            price_multiplier=cfg.elastic_price_multiplier,
-        )
-        self.coordinator = QueryCoordinator(self.vm, self.cf, cfg.policy, cfg.sla)
-        if cfg.sla.spill_enabled:
-            self.vm.spill_to = self.cf
-            self.vm.spill_policy = self.coordinator.should_spill
+        self.coordinator.wire_rehoming()
+        self.vm = self.coordinator.vm
+        self.cf = self.coordinator.cf
         self.service = ServiceLayer(
             self.coordinator, cfg.sla, cfg.sla_enabled, fuse=cfg.fuse_queries
         )
@@ -201,17 +208,18 @@ class Simulation:
                 if (
                     ai < len(arrivals)
                     or self.service.pending
-                    or self.vm.run_queue_len
-                    or self.cf.run_queue_len
+                    or any(p.run_queue_len for p in self.pools)
                 ):
                     push(now + cfg.sla.poll_period_s, "poll")
             # drain every stage completion due by now (exact per-stage
-            # finish times are stamped inside the executors)
-            finished.extend(self.vm.advance_to(now))
-            finished.extend(self.cf.advance_to(now))
+            # finish times are stamped inside the executors); a pool's
+            # advance may re-home a query onto an earlier pool (spill /
+            # spill-back), whose next stage lands in `nxts` below
+            for pool in self.pools:
+                finished.extend(pool.advance_to(now))
             nxts = [
                 t
-                for t in (self.vm.next_event_time(), self.cf.next_event_time())
+                for t in (p.next_event_time() for p in self.pools)
                 if t is not None
             ]
             if nxts:
@@ -241,6 +249,7 @@ class Simulation:
                     m.retries = q.retries  # member so summaries stay exact
                     m.preemptions = q.preemptions
                     m.spilled = q.spilled
+                    m.spill_backs = q.spill_backs
                 expanded.append(m)
         return SimResult(expanded, cfg)
 

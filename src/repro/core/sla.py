@@ -59,3 +59,9 @@ class SLAConfig:
     #: only spill queries whose remaining stages are worth the elastic
     #: premium (seconds of remaining work on the VM slice)
     spill_min_remaining_s: float = 5.0
+    #: symmetric spill: a spilled query returns to a reserved pool at its
+    #: next stage boundary once that pool has a free slice and its
+    #: predicted backlog drain time falls below this low watermark
+    #: (seconds) — remaining stages bill at the reserved rate again
+    spill_back_enabled: bool = False
+    spill_back_low_backlog_s: float = 30.0

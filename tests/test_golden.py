@@ -1,0 +1,128 @@
+"""Golden-trace regression gate: a fixed-seed ~500-query day through the
+FULL engine (3-pool registry, SOS slices, preemption, spill, spill-back,
+backlog autoscale, stage faults) snapshotted to tests/golden/sim_trace.json.
+
+Any behavioral drift — routing, billing, autoscale cadence, fault
+sampling order — shows up as a diff against the snapshot. Regenerate
+intentionally with:
+
+    PYTHONPATH=src python -m pytest tests/test_golden.py --update-golden
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultModel,
+    Policy,
+    PoolSpec,
+    SimConfig,
+    Simulation,
+    SLAConfig,
+    generate,
+    scaled_patterns,
+)
+from repro.core.clusters import AutoscaleConfig
+
+GOLDEN = Path(__file__).parent / "golden" / "sim_trace.json"
+
+
+def _golden_config() -> SimConfig:
+    return SimConfig(
+        policy=Policy.FORCE,
+        use_calibration=False,
+        seed=42,
+        fault=FaultModel(failure_prob=0.02, straggler_prob=0.02),
+        sla=SLAConfig(
+            vm_overload_threshold=8,
+            preempt_best_effort=True,
+            spill_enabled=True,
+            spill_back_enabled=True,
+            spill_back_low_backlog_s=30.0,
+        ),
+        pools=[
+            PoolSpec(name="vm", kind="reserved", chips=32, mode="sos",
+                     slice_chips=16,
+                     autoscale=AutoscaleConfig(
+                         enabled=True, trigger="backlog", min_chips=32,
+                         max_chips=64, step_chips=16, scale_delay_s=120.0,
+                         backlog_high_s=60.0, backlog_low_s=5.0)),
+            PoolSpec(name="spot", kind="reserved", chips=64, mode="sos",
+                     slice_chips=16, speed_factor=0.25,
+                     price_multiplier=0.15),
+            PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0,
+                     price_multiplier=10.0),
+        ],
+    )
+
+
+def _snapshot() -> dict:
+    # ~500 queries: Table 1 (911/day) scaled by 0.55 on the 4h horizon
+    qs = generate(horizon_s=14_400.0, seed=42, patterns=scaled_patterns(0.55))
+    res = Simulation(_golden_config()).run(qs)
+    by = res.by_sla()
+    per_sla = {}
+    for k, queries in by.items():
+        waits = [q.queue_wait or 0.0 for q in queries]
+        per_sla[k] = {
+            "n": len(queries),
+            "p95_wait_s": round(float(np.percentile(waits, 95)), 4)
+            if waits else 0.0,
+            "cost": round(sum(q.cost for q in queries), 4),
+            "stages": sum(len(q.stage_trace) for q in queries),
+        }
+    s = res.summary()
+    return {
+        "n": len(res.queries),
+        "finished": s["finished"],
+        "total_cost": round(res.total_cost(), 4),
+        "per_sla": per_sla,
+        "stages": s["stages"],
+        "preemptions": s["preemptions"],
+        "spilled": s["spilled"],
+        "spill_backs": s["spill_backs"],
+        "retries": s["retries"],
+        "violations": s["violations"],
+        "by_pool": {
+            name: sum(q.cluster == name for q in res.queries)
+            for name in ("vm", "spot", "cf")
+        },
+    }
+
+
+def _diff(golden: dict, got: dict, prefix: str = "") -> list:
+    out = []
+    for key in sorted(set(golden) | set(got)):
+        g, o = golden.get(key), got.get(key)
+        path = f"{prefix}{key}"
+        if isinstance(g, dict) and isinstance(o, dict):
+            out.extend(_diff(g, o, prefix=path + "."))
+        elif g != o:
+            out.append(f"  {path}: golden={g!r} got={o!r}")
+    return out
+
+
+def test_golden_trace_matches_snapshot(update_golden):
+    got = _snapshot()
+    if update_golden:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(got, indent=2, sort_keys=True) + "\n")
+        pytest.skip(f"golden snapshot regenerated at {GOLDEN}")
+    assert GOLDEN.exists(), (
+        f"missing {GOLDEN}; generate it with --update-golden"
+    )
+    golden = json.loads(GOLDEN.read_text())
+    diff = _diff(golden, got)
+    assert not diff, (
+        "simulator behavior drifted from the golden trace "
+        "(regenerate intentionally with --update-golden):\n"
+        + "\n".join(diff)
+    )
+
+
+def test_golden_run_is_deterministic():
+    """The snapshot is reproducible within one process — a prerequisite
+    for the golden gate to mean anything."""
+    assert _snapshot() == _snapshot()

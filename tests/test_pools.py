@@ -1,0 +1,360 @@
+"""Multi-pool executor registry (core/pools.py): quote-based routing,
+backlog-driven autoscale, symmetric spill-back, and degeneracy to the
+PR-1 two-cluster simulator."""
+import itertools
+
+import pytest
+
+from repro.core import (
+    CostModel,
+    PoolSpec,
+    Policy,
+    Query,
+    QueryWork,
+    ServiceLevel,
+    SimConfig,
+    Simulation,
+    SLAConfig,
+    build_pool,
+    default_pool_specs,
+    generate,
+    run_sim,
+)
+from repro.core.clusters import AutoscaleConfig, CostEfficientCluster
+
+PIN_VM = dict(vm_overload_threshold=10**9)  # keep the coordinator reserved
+
+
+def _mk(sla, t, tokens=100_000, out=8, arch="paper-default"):
+    return Query(
+        work=QueryWork(arch=arch, prompt_tokens=tokens, output_tokens=out),
+        sla=sla,
+        submit_time=t,
+    )
+
+
+def _norm_finish(res):
+    """Per-query (relative qid, cluster, finish, cost) — the bit-for-bit
+    comparison key (qids are globally counted, so compare relative)."""
+    base = min(q.qid for q in res.queries)
+    return [
+        (q.qid - base, q.cluster, q.finish_time, q.cost)
+        for q in sorted(res.queries, key=lambda q: q.qid)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# registry degeneracy: the new machinery reproduces PR-1 exactly
+# ---------------------------------------------------------------------------
+
+def test_default_registry_is_the_legacy_vm_cf_pair():
+    """SimConfig(pools=None) and an explicit default spec list are the
+    same system: same per-query finish times and costs."""
+    legacy = run_sim(generate(horizon_s=3600, seed=3), use_calibration=False)
+    cfg = SimConfig(use_calibration=False, pools=default_pool_specs())
+    explicit = Simulation(cfg).run(generate(horizon_s=3600, seed=3))
+    assert _norm_finish(legacy) == _norm_finish(explicit)
+
+
+def test_single_pool_registry_degenerates_to_pr1():
+    """A registry of ONE reserved pool routes everything there and
+    reproduces the legacy simulator with the elastic pool unreachable
+    (overload threshold pinned) — same seed, same per-query finish
+    times, bit for bit."""
+    sla = SLAConfig(**PIN_VM)
+    legacy = run_sim(
+        generate(horizon_s=3600, seed=4), vm_mode="sos", vm_chips=64,
+        sos_slice_chips=16, use_calibration=False, sla=sla,
+    )
+    solo = Simulation(SimConfig(
+        use_calibration=False, sla=sla,
+        pools=[PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                        slice_chips=16)],
+    )).run(generate(horizon_s=3600, seed=4))
+    assert all(q.cluster == "vm" for q in solo.queries)
+    assert _norm_finish(legacy) == _norm_finish(solo)
+
+
+def test_single_pool_registry_handles_every_policy():
+    for policy in (Policy.AUTO, Policy.FORCE, Policy.LATENCY_AWARE):
+        res = Simulation(SimConfig(
+            policy=policy, use_calibration=False,
+            pools=[PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                            slice_chips=16)],
+        )).run([_mk(ServiceLevel(i % 3), float(i)) for i in range(9)])
+        assert all(q.finish_time is not None for q in res.queries)
+        assert all(q.cluster == "vm" for q in res.queries)
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: estimate() and should_spill() plan with the SAME chips
+# ---------------------------------------------------------------------------
+
+def test_effective_chips_is_the_single_planning_accessor():
+    """SOS pools plan on the isolated sub-slice, POS pools on the whole
+    slice — and quotes, spill thresholds, and execution all read the one
+    effective_chips accessor (the old estimate() planned VM latency with
+    .chips while should_spill used .slice_chips; quotes were wrong in
+    SOS mode)."""
+    q = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=500_000, out=16)
+    sos = Simulation(SimConfig(vm_mode="sos", vm_chips=64, sos_slice_chips=16,
+                               use_calibration=False))
+    pos = Simulation(SimConfig(vm_mode="pos", vm_chips=64,
+                               use_calibration=False))
+    assert sos.vm.effective_chips(q) == sos.vm.slice_chips == 16
+    assert pos.vm.effective_chips(q) == pos.vm.chips == 64
+
+
+def test_quote_and_spill_threshold_agree_on_the_plan():
+    """The vm quote and the spill policy derive from the same remaining-
+    stage plan: an idle SOS pool quotes exactly the slice execution time,
+    and the spill threshold compares against that same plan's remaining
+    time."""
+    sim = Simulation(SimConfig(
+        vm_mode="sos", vm_chips=64, sos_slice_chips=16, use_calibration=False,
+        sla=SLAConfig(spill_enabled=True, spill_min_remaining_s=5.0, **PIN_VM),
+    ))
+    q = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=500_000, out=16)
+    plan = sim.vm.cost_model.plan(q.work, sim.vm.effective_chips(q))
+    quote = sim.coordinator.estimate(q, now=0.0)["vm"]
+    assert quote["latency_s"] == pytest.approx(plan.exec_time)  # idle: no wait
+    assert quote["cost"] == pytest.approx(
+        plan.chip_seconds * sim.vm.price_per_chip_s
+    )
+    # should_spill's "worth the premium" test reads the same plan: with a
+    # displacing waiter present, the verdict flips exactly at the plan's
+    # remaining time, not at a whole-pool-chips replanning of it
+    sim.vm.waiting.append(_mk(ServiceLevel.IMMEDIATE, 0.0))
+    assert sim.coordinator.should_spill(q, 0.0) == (
+        plan.remaining_time(q.stage_cursor) >= 5.0
+    )
+    fat = SLAConfig(spill_enabled=True,
+                    spill_min_remaining_s=plan.exec_time + 1.0, **PIN_VM)
+    sim.coordinator.cfg = fat
+    assert not sim.coordinator.should_spill(q, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# quotes across a heterogeneous registry
+# ---------------------------------------------------------------------------
+
+def _three_pool_specs(**vm_kw):
+    return [
+        PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                 slice_chips=16, **vm_kw),
+        PoolSpec(name="spot", kind="reserved", chips=256, mode="sos",
+                 slice_chips=16, speed_factor=0.25, price_multiplier=0.15),
+        PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0,
+                 price_multiplier=10.0),
+    ]
+
+
+def test_quotes_expose_the_cost_latency_frontier():
+    """The slow cheap pool quotes higher latency and lower cost than the
+    fast reserved pool; the elastic pool quotes low latency at a premium
+    — the frontier the coordinator routes across."""
+    sim = Simulation(SimConfig(pools=_three_pool_specs(),
+                               use_calibration=False))
+    q = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=1_000_000, out=32)
+    est = sim.coordinator.estimate(q, now=0.0)
+    assert set(est) == {"vm", "spot", "cf"}
+    assert est["spot"]["latency_s"] > est["vm"]["latency_s"]
+    assert est["spot"]["cost"] < est["vm"]["cost"]
+    assert est["cf"]["cost"] > est["vm"]["cost"]
+
+
+def test_force_routes_tiers_by_quote():
+    """FORCE: relaxed/BoE land on the cheapest reserved quote (the spot
+    pool), IMMEDIATE on the fastest open reserved quote (the v5e pool)."""
+    sim = Simulation(SimConfig(
+        policy=Policy.FORCE, pools=_three_pool_specs(), use_calibration=False,
+        sla=SLAConfig(**PIN_VM),
+    ))
+    imm = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=1_000_000, out=32)
+    boe = _mk(ServiceLevel.BEST_EFFORT, 0.0, tokens=1_000_000, out=32)
+    res = sim.run([imm, boe])
+    by = {q.qid: q for q in res.queries}
+    assert by[imm.qid].cluster == "vm"
+    assert by[boe.qid].cluster == "spot"
+    # billed at the pool's own price and speed
+    spot = sim.coordinator.by_name["spot"]
+    assert by[boe.qid].cost == pytest.approx(
+        by[boe.qid].chip_seconds * spot.price_per_chip_s
+    )
+
+
+def test_speed_factor_scales_times_not_structure():
+    """A 0.25x pool runs every stage 4x longer on the SAME plan
+    structure — the invariant that keeps a mid-plan cursor valid when a
+    query hops pools."""
+    w = QueryWork(arch="paper-default", prompt_tokens=400_000, output_tokens=70)
+    fast = CostModel(use_calibration=False).plan(w, 16)
+    slow = CostModel(use_calibration=False, speed_factor=0.25).plan(w, 16)
+    assert [s.name for s in fast.stages] == [s.name for s in slow.stages]
+    assert slow.exec_time == pytest.approx(4 * fast.exec_time)
+    assert slow.chip_seconds == pytest.approx(4 * fast.chip_seconds)
+
+
+# ---------------------------------------------------------------------------
+# backlog-driven autoscale
+# ---------------------------------------------------------------------------
+
+def _autoscale_vm(trigger, **kw):
+    auto = AutoscaleConfig(
+        enabled=True, trigger=trigger, min_chips=16, max_chips=64,
+        step_chips=16, scale_delay_s=180.0, high_watermark=8,
+        backlog_high_s=1.0, backlog_low_s=0.01, **kw,
+    )
+    return CostEfficientCluster(
+        chips=16, mode="sos", sos_slice_chips=16,
+        cost_model=CostModel(use_calibration=False), autoscale=auto,
+    )
+
+
+def test_backlog_scale_out_fires_before_run_queue_would():
+    """One huge QUEUED query is a large predicted backlog long before it
+    is a long run queue: the backlog trigger schedules a scale-out while
+    the run-queue trigger (queue length 2 < watermark 8) stays idle."""
+    rq = _autoscale_vm("run_queue")
+    for _ in range(2):
+        rq.submit(_mk(ServiceLevel.IMMEDIATE, 0.0, tokens=5_000_000, out=64), 0.0)
+    assert rq._pending_scale == []  # 2 < high_watermark: no reaction
+    bl = _autoscale_vm("backlog")
+    for _ in range(2):  # one runs on the single slice, one queues
+        bl.submit(_mk(ServiceLevel.IMMEDIATE, 0.0, tokens=5_000_000, out=64), 0.0)
+    assert bl._pending_scale, "backlog trigger must schedule a scale-out"
+    (at, chips) = bl._pending_scale[0]
+    assert at == pytest.approx(180.0) and chips == 32
+
+
+def test_backlog_scale_out_needs_queued_work():
+    """A long RUNNING stage inflates the backlog, but new slices can't
+    help it: a query that a free slice admits immediately must not read
+    as backlog pressure (the trigger is evaluated AFTER admission)."""
+    bl = _autoscale_vm("backlog")
+    bl.submit(_mk(ServiceLevel.IMMEDIATE, 0.0, tokens=5_000_000, out=64), 0.0)
+    assert bl._pending_scale == []  # admitted instantly: nothing queued
+
+
+def test_backlog_scale_in_when_drained():
+    vm = _autoscale_vm("backlog")
+    vm.chips = 64
+    vm._admit(0.0)  # idle: drain time 0 <= low watermark -> scale in
+    assert vm._pending_scale and vm._pending_scale[0][1] == 48
+
+
+def test_predicted_backlog_counts_running_and_waiting_remainders():
+    cm = CostModel(use_calibration=False)
+    vm = CostEfficientCluster(chips=16, mode="sos", sos_slice_chips=16,
+                              cost_model=cm)
+    a = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=1_000_000, out=32)
+    b = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=1_000_000, out=32)
+    vm.submit(a, 0.0)  # runs (1 slice)
+    vm.submit(b, 0.0)  # waits
+    expected = 2 * cm.plan(a.work, 16).chip_seconds
+    assert vm.predicted_backlog_s(0.0) == pytest.approx(expected)
+    # the backlog decays as the running stage executes — by elapsed time
+    # on the slice, capped at the current stage's remaining work
+    later = vm.predicted_backlog_s(1.0)
+    assert expected - 1.0 * 16 <= later < expected
+
+
+def test_autoscaled_registry_pool_runs_end_to_end():
+    auto = AutoscaleConfig(enabled=True, trigger="backlog", min_chips=16,
+                           max_chips=64, step_chips=16, scale_delay_s=60.0,
+                           backlog_high_s=5.0, backlog_low_s=0.5)
+    res = Simulation(SimConfig(
+        use_calibration=False,
+        pools=[PoolSpec(name="vm", kind="reserved", chips=16, mode="sos",
+                        slice_chips=16, autoscale=auto)],
+    )).run(generate(horizon_s=3600, seed=6))
+    assert all(q.finish_time is not None for q in res.queries)
+
+
+# ---------------------------------------------------------------------------
+# symmetric spill-back
+# ---------------------------------------------------------------------------
+
+def _spill_back_run(spill_back: bool):
+    pools = [
+        PoolSpec(name="vm", kind="reserved", chips=4, mode="sos",
+                 slice_chips=4),
+        PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0,
+                 price_multiplier=10.0),
+    ]
+    cfg = SimConfig(pools=pools, use_calibration=False, sla=SLAConfig(
+        spill_enabled=True, spill_back_enabled=spill_back,
+        spill_back_low_backlog_s=1e9, **PIN_VM,
+    ))
+    long_q = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=2_000_000, out=2048)
+    rival = _mk(ServiceLevel.IMMEDIATE, 30.0, tokens=100_000, out=8)
+    sim = Simulation(cfg)
+    res = sim.run([long_q, rival])
+    return sim, {q.qid: q for q in res.queries}[long_q.qid]
+
+
+def test_spill_back_returns_to_the_reserved_pool():
+    sim, q = _spill_back_run(True)
+    assert q.spilled and q.spill_backs >= 1 and q.state == "done"
+    segments = [k for k, _ in itertools.groupby(e.cluster for e in q.stage_trace)]
+    assert segments[0] == "vm" and "cf" in segments and segments[-1] == "vm"
+    # every stage ran exactly once, in order: nothing stranded or re-run
+    assert [e.index for e in q.stage_trace] == list(range(len(q.stage_trace)))
+    # chip-seconds conserved across both hops
+    assert q.chip_seconds == pytest.approx(
+        sum(e.chip_seconds for e in q.stage_trace)
+    )
+    # each stage billed at the price of the pool it ran on
+    for e in q.stage_trace:
+        pool = sim.coordinator.by_name[e.cluster]
+        assert e.cost == pytest.approx(e.chip_seconds * pool.price_per_chip_s)
+
+
+def test_spill_back_is_cheaper_than_one_way_spill():
+    _, back = _spill_back_run(True)
+    _, stay = _spill_back_run(False)
+    assert back.spill_backs >= 1 and stay.spill_backs == 0
+    assert back.cost < stay.cost  # elastic premium paid for fewer stages
+
+
+def test_spill_back_never_strands_a_query_mid_stage():
+    """Under a contended stream with spill + spill-back on, every query
+    finishes, and every pool hop happens at a stage boundary (stage
+    indices strictly increasing, each exactly once)."""
+    res = run_sim(
+        generate(horizon_s=3600, seed=5), vm_mode="sos", vm_chips=32,
+        sos_slice_chips=16, use_calibration=False,
+        sla=SLAConfig(preempt_best_effort=True, spill_enabled=True,
+                      spill_back_enabled=True, spill_back_low_backlog_s=60.0,
+                      vm_overload_threshold=4),
+    )
+    assert all(q.finish_time is not None for q in res.queries)
+    assert all(q.state == "done" for q in res.queries)
+    for q in res.queries:
+        idx = [e.index for e in q.stage_trace]
+        assert idx == sorted(set(idx)), f"stage re-run or lost on Q{q.qid}"
+        assert q.chip_seconds == pytest.approx(
+            sum(e.chip_seconds for e in q.stage_trace)
+        )
+
+
+def test_spill_back_waits_for_low_backlog():
+    """With the low watermark at 0 the reserved pool never looks drained
+    enough, so a spilled query stays on the elastic pool (one-way PR-1
+    spill)."""
+    pools = [
+        PoolSpec(name="vm", kind="reserved", chips=4, mode="sos",
+                 slice_chips=4),
+        PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0,
+                 price_multiplier=10.0),
+    ]
+    cfg = SimConfig(pools=pools, use_calibration=False, sla=SLAConfig(
+        spill_enabled=True, spill_back_enabled=True,
+        spill_back_low_backlog_s=-1.0, **PIN_VM,
+    ))
+    long_q = _mk(ServiceLevel.IMMEDIATE, 0.0, tokens=2_000_000, out=2048)
+    rival = _mk(ServiceLevel.IMMEDIATE, 30.0, tokens=100_000, out=8)
+    res = Simulation(cfg).run([long_q, rival])
+    q = {x.qid: x for x in res.queries}[long_q.qid]
+    assert q.spilled and q.spill_backs == 0
+    assert [e.cluster for e in q.stage_trace][-1] == "cf"

@@ -7,8 +7,17 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip, don't error, collection
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import Policy, Query, QueryWork, ServiceLevel, run_sim
+from repro.core import (
+    FaultModel,
+    Policy,
+    Query,
+    QueryWork,
+    ServiceLevel,
+    SLAConfig,
+    run_sim,
+)
 from repro.core.cost_model import CostModel
+from repro.core.engine import ClusterExecutor
 from repro.parallel.compress import dequantize_int8, ef_compress, quantize_int8
 from repro.parallel.sharding import TRAIN_RULES, spec_for
 
@@ -141,6 +150,94 @@ def test_relaxed_pending_guarantee_any_stream(seed, n, policy):
     # billing consistency: every finished query was billed for its work
     for q in res.queries:
         assert q.cost > 0 and q.chip_seconds > 0
+
+
+# ---------------------------------------------------------------------------
+# stage-engine invariants under arbitrary preempt/spill/retry sequences
+# ---------------------------------------------------------------------------
+
+def _random_stream(seed: int, n: int) -> list[Query]:
+    rng = np.random.default_rng(seed)
+    return [
+        Query(
+            work=QueryWork(
+                arch="paper-default",
+                prompt_tokens=int(rng.integers(50_000, 3_000_000)),
+                output_tokens=int(rng.integers(1, 256)),
+            ),
+            sla=ServiceLevel(int(rng.integers(0, 3))),
+            submit_time=float(rng.uniform(0, 600)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _run_heap_checked(seed: int, n: int, spill_back: bool):
+    """A contended SOS sim with preemption + spill (+ spill-back) + stage
+    faults, re-checking the heap discipline after EVERY executor advance:
+    every running stage has exactly one valid heap entry, and no valid
+    entry refers to a retired run."""
+    orig = ClusterExecutor.advance_to
+
+    def checked(self, now):
+        out = orig(self, now)
+        self.check_heap_invariant()
+        return out
+
+    ClusterExecutor.advance_to = checked
+    try:
+        return run_sim(
+            _random_stream(seed, n),
+            vm_mode="sos", vm_chips=32, sos_slice_chips=16,
+            use_calibration=False, seed=seed,
+            fault=FaultModel(failure_prob=0.1, straggler_prob=0.1),
+            sla=SLAConfig(
+                preempt_best_effort=True, spill_enabled=True,
+                spill_back_enabled=spill_back,
+                spill_back_low_backlog_s=30.0, vm_overload_threshold=3,
+            ),
+        )
+    finally:
+        ClusterExecutor.advance_to = orig
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(5, 25),
+    spill_back=st.booleans(),
+)
+def test_heap_discipline_any_preempt_spill_retry_sequence(seed, n, spill_back):
+    """The engine's core data-structure invariant survives ANY sequence
+    of preemptions, cross-pool spills, spill-backs, and stage retries."""
+    res = _run_heap_checked(seed, n, spill_back)
+    assert len(res.queries) == n
+    for q in res.queries:
+        assert q.finish_time is not None and q.state == "done"
+        # every stage ran exactly once, in order, across all pool hops
+        idx = [e.index for e in q.stage_trace]
+        assert idx == list(range(len(idx)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(5, 25),
+    spill_back=st.booleans(),
+)
+def test_billed_chip_seconds_are_conserved(seed, n, spill_back):
+    """Billing conservation: each query's billed chip-seconds equal the
+    sum of its per-stage trace records — bit for bit through preemption,
+    pool hops, and retry re-billing — and its cost is the per-stage cost
+    at each executing pool's own price."""
+    res = _run_heap_checked(seed, n, spill_back)
+    for q in res.queries:
+        assert q.chip_seconds == pytest.approx(
+            sum(e.chip_seconds for e in q.stage_trace)
+        )
+        assert q.cost == pytest.approx(sum(e.cost for e in q.stage_trace))
+        # a retried stage bills MORE than its clean run, never less
+        assert q.chip_seconds > 0 and q.cost > 0
 
 
 # ---------------------------------------------------------------------------
