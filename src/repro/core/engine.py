@@ -54,6 +54,36 @@ class StageEvent:
     retries: int
 
 
+def account_stage(
+    q: Query,
+    *,
+    stage: str,
+    cluster: str,
+    start: float,
+    finish: float,
+    chips: int,
+    billed_cs: float,
+    price_per_chip_s: float,
+    retries: int = 0,
+) -> StageEvent:
+    """Record one completed stage on the query: bill the chip-seconds,
+    add the cost, append the trace event, advance the cursor. Both the
+    simulated executors and the live engine (core/live.py) account
+    through this one helper, so live billing is the same per-stage
+    arithmetic the simulator's conservation tests lock down."""
+    cost = billed_cs * price_per_chip_s
+    q.chip_seconds += billed_cs
+    q.cost += cost
+    ev = StageEvent(
+        qid=q.qid, stage=stage, index=q.stage_cursor, cluster=cluster,
+        start=start, finish=finish, chips=chips, chip_seconds=billed_cs,
+        cost=cost, retries=retries,
+    )
+    q.stage_trace.append(ev)
+    q.stage_cursor += 1
+    return ev
+
+
 class _Run:
     """Execution state of the CURRENT stage of one admitted query."""
 
@@ -321,17 +351,13 @@ class ClusterExecutor:
         self._sync(t)
         q = run.query
         stage = run.plan.stages[q.stage_cursor]
-        cost = run.billed_cs * self.price_per_chip_s
-        q.chip_seconds += run.billed_cs
-        q.cost += cost
-        q.stage_trace.append(StageEvent(
-            qid=q.qid, stage=stage.name, index=q.stage_cursor,
-            cluster=self.name, start=run.stage_start, finish=t,
-            chips=run.chips, chip_seconds=run.billed_cs, cost=cost,
+        account_stage(
+            q, stage=stage.name, cluster=self.name, start=run.stage_start,
+            finish=t, chips=run.chips, billed_cs=run.billed_cs,
+            price_per_chip_s=self.price_per_chip_s,
             retries=run.stage_retries,
-        ))
+        )
         self.stages_completed += 1
-        q.stage_cursor += 1
         if q.stage_cursor >= len(run.plan.stages):
             run.active = False
             del self.running[run]

@@ -27,6 +27,7 @@ class Quote:
     est_pending_s: float  # worst-case pending under the level's guarantee
     est_exec_s: float
     est_cost: float
+    pool: str = ""  # registry pool backing the estimate
 
     def as_dict(self) -> dict:
         return {
@@ -34,12 +35,44 @@ class Quote:
             "est_pending_s": round(self.est_pending_s, 2),
             "est_exec_s": round(self.est_exec_s, 2),
             "est_cost": round(self.est_cost, 4),
+            "pool": self.pool,
         }
+
+
+@dataclass(frozen=True)
+class _PoolRow:
+    """One pool's (exec time, cost) for the work — the raw frontier."""
+
+    name: str
+    kind: str  # reserved | elastic
+    exec_s: float
+    cost: float
+
+
+def _menu_from_rows(rows: list[_PoolRow], relaxed_deadline_s: float) -> list[Quote]:
+    """Fold per-pool rows into the three-level menu. Immediate may land
+    on the burst tier under load, so it is priced at the WORST elastic
+    cost while quoting the fastest execution anywhere; relaxed/BoE run
+    on the cheapest cost-efficient pool."""
+    elastic = [r for r in rows if r.kind == "elastic"] or rows
+    reserved = [r for r in rows if r.kind == "reserved"] or rows
+    imm_price = max(elastic, key=lambda r: r.cost)
+    imm_exec = min(rows, key=lambda r: r.exec_s)
+    cheap = min(reserved, key=lambda r: r.cost)
+    return [
+        Quote("immediate", 0.0, imm_exec.exec_s, imm_price.cost,
+              pool=imm_price.name),
+        Quote("relaxed", relaxed_deadline_s, cheap.exec_s, cheap.cost,
+              pool=cheap.name),
+        Quote("best_effort", float("inf"), cheap.exec_s, cheap.cost,
+              pool=cheap.name),
+    ]
 
 
 def price_menu(
     work: QueryWork,
     *,
+    pools: Optional[Iterable] = None,
     cost_model: Optional[CostModel] = None,
     vm_chips: int = 4,
     cf_chips: int = 32,
@@ -49,19 +82,40 @@ def price_menu(
 ) -> list[Quote]:
     """The menu a user sees before choosing a service level: each level's
     worst-case pending time, estimated execution time, and price. Made
-    possible by the deterministic SOS cost model (paper §3.3 vision 1)."""
+    possible by the deterministic SOS cost model (paper §3.3 vision 1).
+
+    With ``pools`` — any executor registry, simulated (build_pool) or
+    live (LiveEngine.pools) — the frontier is quoted per pool: each
+    pool's own cost model, slice sizing (``effective_chips``) and unit
+    price produce one row, and ``Quote.pool`` names the pool backing
+    each level's PRICE (the immediate row's exec time is the fastest
+    pool's, which may be a different pool). Without it, the legacy
+    vm/cf knob pair prices the same rows as before — identical
+    estimates whenever the elastic pool is the faster one (true for the
+    default knobs: cf_chips > vm_chips)."""
+    if pools is not None:
+        probe = Query(work=work, sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+        rows = []
+        for p in pools:
+            chips = p.effective_chips(probe)
+            plan = p.cost_model.plan(work, chips)
+            rows.append(_PoolRow(
+                name=p.name,
+                kind=p.pool_kind,
+                exec_s=plan.exec_time,
+                cost=plan.chip_seconds * p.price_per_chip_s,
+            ))
+        if not rows:
+            raise ValueError("price_menu needs at least one pool")
+        return _menu_from_rows(rows, relaxed_deadline_s)
     cm = cost_model or CostModel()
-    vm_exec = cm.exec_time(work, vm_chips)
-    vm_cost = cm.chip_seconds(work, vm_chips) * vm_price_s
-    cf_exec = cm.exec_time(work, cf_chips)
-    cf_cost = cm.chip_seconds(work, cf_chips) * vm_price_s * cf_multiplier
-    return [
-        # immediate: may land on the elastic pool under load -> price the
-        # worst case (elastic), exec the fast pool
-        Quote("immediate", 0.0, cf_exec, cf_cost),
-        Quote("relaxed", relaxed_deadline_s, vm_exec, vm_cost),
-        Quote("best_effort", float("inf"), vm_exec, vm_cost),
+    rows = [
+        _PoolRow("vm", "reserved", cm.exec_time(work, vm_chips),
+                 cm.chip_seconds(work, vm_chips) * vm_price_s),
+        _PoolRow("cf", "elastic", cm.exec_time(work, cf_chips),
+                 cm.chip_seconds(work, cf_chips) * vm_price_s * cf_multiplier),
     ]
+    return _menu_from_rows(rows, relaxed_deadline_s)
 
 
 # ---------------------------------------------------------------------------

@@ -1,47 +1,450 @@
-"""LIVE execution backend for the SLA service: the same ServiceLayer /
-schedulers / coordinator drive real jitted JAX work on this host.
+"""LIVE execution backend: the same ServiceLayer / schedulers /
+QueryCoordinator drive real jitted JAX work on this host, over the same
+PoolSpec registry the simulator uses (core/pools.py).
 
 The simulator (simulator.py) answers "what would this schedule cost on a
-TPU fleet"; the live engine proves the scheduling layer is a real runtime,
-not a model: queries run reduced-config models, the cost-efficient
-"cluster" is a single worker thread (serialized, interference-free), and
-the high-elastic "cluster" is an unbounded thread pool with a simulated
-provisioning delay. Used by examples/serve_sla.py and tests/test_live.py.
+TPU fleet"; the live engine proves the scheduling layer is a real
+runtime, not a model. A live pool is thread-backed hardware:
+
+  kind="reserved" -> one serialized worker thread per chip (the
+                     interference-free cost-efficient tier)
+  kind="elastic"  -> a task pool of up to `chips` threads, each task
+                     preceded by a provisioning sleep of `startup_s`
+
+A running query executes its StagePlan chunk-by-chunk through the jitted
+model — a prefill stage, then at most ``decode_chunk_tokens`` decode
+steps per stage — and its decode state (KV cache + last token; the stage
+cursor lives on the Query) is checkpointed at EVERY stage boundary. That
+makes the stage-boundary policies exact on real work: an IMMEDIATE
+arrival preempts a running BEST_EFFORT query at its next chunk, overload
+spills the remaining chunks to an elastic pool, and spill-back returns
+them — in all cases the resumed query re-runs nothing, and billing flows
+through the same ``account_stage`` arithmetic as the simulator (measured
+wall-seconds on a 1-chip worker, at the pool's price).
+
+Placement is the coordinator's: every routing / spill / spill-back
+decision reads ``pool.quote(q)``, never a hardcoded vm/cf branch.
+Used by examples/serve_sla.py, tests/test_live.py, tests/test_system.py.
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs import get_config
 from ..models.transformer import LM
-from ..perf.hw import V5E
-from .query import Query
+from .cost_model import CostModel
+from .engine import ClusterExecutor, account_stage
+from .pools import PoolSpec, build_live_pool, default_live_pool_specs
+from .query import Query, QueryWork
+from .scheduler import QueryCoordinator, ServiceLayer
 from .sla import Policy, ServiceLevel, SLAConfig
 
 
-class _ModelPool:
-    """Jitted reduced models, shared by both clusters."""
+def _prompt_inputs(cfg, batch: int, prompt_tokens: int, seed: int):
+    """Prompt batch + frontend/encoder kwargs for one prefill call. The
+    SHAPES depend only on (arch, batch, prompt_tokens) — the warm-up and
+    every billed prefill must trace identically."""
+    toks = jax.random.randint(
+        jax.random.PRNGKey(seed), (batch, prompt_tokens), 0, cfg.vocab_size
+    )
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["enc_embeds"] = jnp.zeros(
+            (batch, prompt_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.frontend == "vision_patches":
+        kw["frontend_embeds"] = jnp.zeros(
+            (batch, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    return toks, kw
 
-    def __init__(self):
-        self._models: dict[str, tuple[LM, dict]] = {}
+
+@dataclass(frozen=True)
+class _LiveModel:
+    """One arch's jitted entry points. ``prefill(params, toks, kw)``
+    returns (next token, decode cache); ``decode(params, cache, tok)``
+    returns (next token, new cache). Greedy sampling is inside the jit,
+    so one stage is exactly one compiled call per token."""
+
+    cfg: Any
+    params: dict
+    prefill: Any
+    decode: Any
+
+
+class _ModelPool:
+    """Jitted reduced models shared by every live pool, warmed OUTSIDE
+    the billed window: the first ``ensure`` for an (arch, batch) shape
+    runs one throwaway prefill + decode step and blocks until compiled,
+    so no stage wall-clock ever includes XLA compile time (the
+    first-query billing skew of the old engine). Compile seconds are
+    recorded per shape in ``compile_s`` for observability."""
+
+    def __init__(self, prompt_tokens: int, decode_tokens: int):
+        self.prompt_tokens = prompt_tokens
+        self.decode_tokens = decode_tokens
+        self._models: dict[str, _LiveModel] = {}
+        self._warm: set[tuple[str, int]] = set()
+        self.compile_s: dict[tuple[str, int], float] = {}
         self._lock = threading.Lock()
 
-    def get(self, arch: str):
+    @property
+    def kv_len(self) -> int:
+        return self.prompt_tokens + self.decode_tokens + 8
+
+    def _build(self, arch: str) -> _LiveModel:
+        cfg = get_config(arch, reduced=True)
+        model = LM(cfg)
+        params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+        kv_len = self.kv_len
+
+        @jax.jit
+        def prefill(params, toks, kw):
+            logits, cache = model.prefill(
+                params, toks, kv_len=kv_len, dtype=jnp.float32, **kw
+            )
+            return jnp.argmax(logits, -1)[:, None], cache
+
+        @jax.jit
+        def decode(params, cache, tok):
+            logits, cache = model.decode_step(
+                params, cache, tok, dtype=jnp.float32
+            )
+            return jnp.argmax(logits, -1)[:, None], cache
+
+        return _LiveModel(cfg=model.cfg, params=params,
+                          prefill=prefill, decode=decode)
+
+    def ensure(self, arch: str, batch: int) -> _LiveModel:
+        """Return the arch's entry points, compiled for this batch."""
         with self._lock:
-            if arch not in self._models:
-                cfg = get_config(arch, reduced=True)
-                model = LM(cfg)
-                params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
-                self._models[arch] = (model, params)
-            return self._models[arch]
+            lm = self._models.get(arch)
+            if lm is None:
+                lm = self._models[arch] = self._build(arch)
+            key = (arch, batch)
+            if key in self._warm:
+                return lm
+            t0 = time.monotonic()
+            toks, kw = _prompt_inputs(lm.cfg, batch, self.prompt_tokens, 0)
+            tok, cache = lm.prefill(lm.params, toks, kw)
+            if self.decode_tokens:
+                tok, cache = lm.decode(lm.params, cache, tok)
+            jax.block_until_ready(tok)
+            self.compile_s[key] = time.monotonic() - t0
+            self._warm.add(key)
+            return lm
+
+
+@dataclass
+class DecodeCheckpoint:
+    """Decode state captured at a stage boundary — what makes live
+    preemption / spill / spill-back EXACT: a resumed query replays
+    nothing, it decodes onward from here. The stage cursor (and the
+    billing already accrued) live on the Query itself; the checkpoint
+    is host-shared, so remaining chunks can resume on any pool."""
+
+    cache: Any  # the model's decode KV-cache pytree
+    tok: Any  # last sampled token, (batch, 1) int32
+    decoded: int  # decode tokens already produced
+
+
+class LiveExecutor(ClusterExecutor):
+    """Thread-backed sibling of the simulated executors: the same
+    placement interface the coordinator's registry reads (quote /
+    effective_chips / run_queue_len / has_capacity / rehome), but stages
+    execute real jitted model work and are billed from MEASURED wall
+    time through the same ``account_stage`` arithmetic.
+
+    One "chip" is one host worker thread. All queue state is guarded by
+    ``_mu`` — counters are moved inside one critical section per
+    transition, so ``run_queue_len`` can never transiently under- or
+    over-count (the old engine's unlocked ``_vm_busy`` race)."""
+
+    def __init__(self, spec: PoolSpec, engine: "LiveEngine"):
+        price = (
+            spec.price_per_chip_hour / 3600.0
+            if spec.price_per_chip_hour is not None
+            else engine.cfg.vm_price * spec.price_multiplier
+        )
+        super().__init__(
+            cost_model=CostModel(
+                use_calibration=False,
+                decode_chunk_tokens=engine.cfg.decode_chunk_tokens,
+                speed_factor=spec.speed_factor,
+            ),
+            price_per_chip_s=price,
+        )
+        self.name = spec.name
+        self.spec = spec
+        self.engine = engine
+        self._mu = threading.RLock()
+        self._cv = threading.Condition(self._mu)
+        # qid -> (Query, placement token). The token is unique per
+        # placement, so releasing an old placement can never clobber a
+        # newer one (a query may hop away and back between pools faster
+        # than the old worker's cleanup runs).
+        self.running: dict[int, tuple[Query, object]] = {}
+        self.waiting: list[Query] = []
+
+    # --- registry interface (what the coordinator reads) --------------
+    def _plan_chips(self, q: Query) -> int:
+        return 1  # one worker thread per running query
+
+    @property
+    def run_queue_len(self) -> int:
+        with self._mu:
+            return len(self.running) + len(self.waiting)
+
+    def predicted_backlog_s(self, now: Optional[float] = None) -> float:
+        """Predicted chip-seconds committed here, from the same cost
+        model the quotes use (live stage walls are unknown upfront)."""
+        with self._mu:
+            qs = [q for q, _ in self.running.values()] + list(self.waiting)
+        return sum(
+            self.cost_model.plan(q.work, 1).remaining_chip_seconds(q.stage_cursor)
+            for q in qs
+        )
+
+    # --- lifecycle -----------------------------------------------------
+    def start(self) -> None:
+        """Begin consuming work (called after the coordinator wires
+        rehoming, so no stage boundary ever misses its policy hook)."""
+
+    def stop(self) -> None:
+        raise NotImplementedError
+
+    def submit(self, q: Query, now: float) -> None:
+        raise NotImplementedError
+
+    def _release(self, q: Query, token: object) -> None:
+        """Drop this placement's `running` entry — a no-op when a newer
+        placement already owns the qid."""
+        with self._cv:
+            cur = self.running.get(q.qid)
+            if cur is not None and cur[1] is token:
+                del self.running[q.qid]
+            self._cv.notify_all()
+
+    # --- the stage loop ------------------------------------------------
+    def _execute(self, q: Query, token: object) -> None:
+        """Run q's remaining stages on this pool. Returns when q
+        finishes, fails, is preempted (re-queued here), or is re-homed.
+        ANY exception surfaces as q.state == "failed" — nothing is
+        swallowed, and drain() counts the failure immediately."""
+        eng = self.engine
+        try:
+            lm = eng.models.ensure(q.work.arch, max(1, q.work.batch))
+            plan = self.cost_model.plan(q.work, 1)
+            if q.start_time is None:
+                q.start_time = eng.now()
+            q.state = "running"
+            q.cluster = self.name
+            while q.stage_cursor < len(plan.stages):
+                if eng._stop.is_set():
+                    return  # shutdown: abandon between chunks, so a
+                    # timed-out drain never waits out a deep backlog
+                stage = plan.stages[q.stage_cursor]
+                start = eng.now()
+                self._run_stage_work(lm, q)
+                finish = eng.now()
+                account_stage(
+                    q, stage=stage.name, cluster=self.name, start=start,
+                    finish=finish, chips=1, billed_cs=finish - start,
+                    price_per_chip_s=self.price_per_chip_s,
+                )
+                with self._mu:  # workers finish stages concurrently
+                    self.stages_completed += 1
+                if q.stage_cursor >= len(plan.stages):
+                    eng._finish(q)
+                    return
+                if self._boundary_stop(q, token):
+                    return
+        except Exception as err:  # noqa: BLE001 — surfaced, not swallowed
+            eng._fail(q, err)
+
+    def _run_stage_work(self, lm: _LiveModel, q: Query) -> None:
+        """Execute the real JAX work of stage ``q.stage_cursor`` and
+        checkpoint the resulting decode state. Chunk boundaries follow
+        CostModel.plan exactly: stage 0 is prefill, stage i > 0 is the
+        next <= decode_chunk_tokens decode steps."""
+        eng = self.engine
+        batch = max(1, q.work.batch)
+        if q.stage_cursor == 0:
+            toks, kw = _prompt_inputs(
+                lm.cfg, batch, q.work.prompt_tokens, seed=q.qid
+            )
+            tok, cache = lm.prefill(lm.params, toks, kw)
+            jax.block_until_ready(tok)
+            eng._save_ckpt(q, DecodeCheckpoint(cache, tok, 0))
+            return
+        ck = eng._load_ckpt(q)
+        chunk = self.cost_model.decode_chunk_tokens or q.work.output_tokens
+        n = min(chunk, q.work.output_tokens - ck.decoded)
+        cache, tok = ck.cache, ck.tok
+        for _ in range(n):
+            tok, cache = lm.decode(lm.params, cache, tok)
+        jax.block_until_ready(tok)
+        eng._save_ckpt(q, DecodeCheckpoint(cache, tok, ck.decoded + n))
+
+    def _boundary_stop(self, q: Query, token: object) -> bool:
+        """Stage-boundary policy, mirroring the simulator's
+        ``_continue_run``: preempt first, then the coordinator's rehome
+        hook (spill / spill-back). True = q stops executing here."""
+        if self._should_preempt(q):
+            q.preemptions += 1
+            q.state = "preempted"
+            with self._cv:
+                # one critical section: leave `running` and re-enter
+                # `waiting`, so run_queue_len never double-counts
+                cur = self.running.get(q.qid)
+                if cur is not None and cur[1] is token:
+                    del self.running[q.qid]
+                self.waiting.append(q)  # resumes at stage_cursor
+                self._cv.notify_all()
+            return True
+        if self.rehome is not None:
+            now = self.engine.now()
+            target = self.rehome(q, now)
+            if target is not None and target is not self:
+                self._handoff(q, target, now)
+                return True
+        return False
+
+    def _should_preempt(self, q: Query) -> bool:
+        return False  # reserved pools override
+
+
+class LiveReservedPool(LiveExecutor):
+    """Serialized worker thread(s): `spec.chips` threads, each running
+    one query's stages at a time — the interference-free SOS tier."""
+
+    pool_kind = "reserved"
+
+    def __init__(self, spec: PoolSpec, engine: "LiveEngine"):
+        super().__init__(spec, engine)
+        self.workers = max(1, spec.chips)
+        self._preempt = (
+            engine.cfg.sla.preempt_best_effort
+            if spec.preempt_best_effort is None
+            else spec.preempt_best_effort
+        )
+        self._threads = [
+            threading.Thread(
+                target=self._worker, name=f"live-{self.name}-{i}", daemon=True
+            )
+            for i in range(self.workers)
+        ]
+
+    def start(self) -> None:
+        for t in self._threads:
+            t.start()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=10.0)
+
+    def has_capacity(self) -> bool:
+        with self._mu:
+            return not self.waiting and len(self.running) < self.workers
+
+    def drain_time_s(self, now: Optional[float] = None) -> float:
+        return self.predicted_backlog_s(now) / self.workers
+
+    def _queue_delay_estimate(self, q: Query, now: Optional[float]) -> float:
+        return 0.0 if self.has_capacity() else self.drain_time_s(now)
+
+    def submit(self, q: Query, now: float) -> None:
+        q.cluster = self.name
+        with self._cv:
+            self.waiting.append(q)
+            self._cv.notify_all()
+
+    def _pop_waiting_locked(self) -> Query:
+        # slice handoff mirrors the simulator: IMMEDIATE first, FIFO
+        # within a level — a resumed preempted query keeps its place
+        best = min(
+            range(len(self.waiting)),
+            key=lambda i: (int(self.waiting[i].current_sla), i),
+        )
+        return self.waiting.pop(best)
+
+    def _worker(self) -> None:
+        stop = self.engine._stop
+        while not stop.is_set():
+            with self._cv:
+                if not self.waiting:
+                    self._cv.wait(timeout=0.05)
+                    continue
+                q = self._pop_waiting_locked()
+                token = object()
+                self.running[q.qid] = (q, token)
+            try:
+                self._execute(q, token)
+            finally:
+                self._release(q, token)
+
+    def _should_preempt(self, q: Query) -> bool:
+        """An IMMEDIATE waiter bumps a running BEST_EFFORT query at this
+        chunk boundary (chip-seconds already billed stay billed)."""
+        if not self._preempt or q.current_sla is not ServiceLevel.BEST_EFFORT:
+            return False
+        with self._mu:
+            return any(
+                w.current_sla is ServiceLevel.IMMEDIATE for w in self.waiting
+            )
+
+
+class LiveElasticPool(LiveExecutor):
+    """Burst tier: up to `spec.chips` concurrent tasks, each preceded by
+    a provisioning sleep of `spec.startup_s` (not billed — provisioning
+    is the provider's cost, the premium unit price is the customer's)."""
+
+    pool_kind = "elastic"
+
+    def __init__(self, spec: PoolSpec, engine: "LiveEngine"):
+        super().__init__(spec, engine)
+        self.startup_s = spec.startup_s
+        self._exec = ThreadPoolExecutor(
+            max_workers=max(1, spec.chips),
+            thread_name_prefix=f"live-{spec.name}",
+        )
+
+    def stop(self) -> None:
+        # queued-but-unstarted tasks are dropped; started ones abandon
+        # at their next chunk boundary (_execute checks engine._stop)
+        self._exec.shutdown(wait=True, cancel_futures=True)
+
+    def _queue_delay_estimate(self, q: Query, now: Optional[float]) -> float:
+        return self.startup_s
+
+    def submit(self, q: Query, now: float) -> None:
+        q.cluster = self.name
+        token = object()
+        with self._mu:
+            self.running[q.qid] = (q, token)  # provisioning is committed
+        try:
+            self._exec.submit(self._task, q, token)
+        except RuntimeError:  # pool already shut down: abandon cleanly
+            self._release(q, token)
+
+    def _task(self, q: Query, token: object) -> None:
+        try:
+            if self.startup_s and not self.engine._stop.is_set():
+                time.sleep(self.startup_s)
+            self._execute(q, token)
+        except BaseException as err:  # pragma: no cover — _execute catches
+            self.engine._fail(q, err)  # belt-and-braces: never swallow
+        finally:
+            self._release(q, token)
 
 
 @dataclass
@@ -50,156 +453,157 @@ class LiveConfig:
     sla_enabled: bool = True
     sla: SLAConfig = field(
         default_factory=lambda: SLAConfig(
-            relaxed_deadline_s=10.0, poll_period_s=0.05, vm_overload_threshold=2
+            relaxed_deadline_s=10.0,
+            poll_period_s=0.05,
+            vm_overload_threshold=2,
+            # live stages are milliseconds, so any remaining work is
+            # worth a hop once spill/spill-back are enabled
+            spill_min_remaining_s=0.0,
         )
     )
+    #: executor registry: a list of PoolSpecs, one thread-backed pool
+    #: each. None builds the legacy vm/cf live pair from the knobs below.
+    pools: Optional[list[PoolSpec]] = None
     cf_startup_s: float = 0.3
-    vm_price: float = 1.0  # $ per worker-second
+    vm_price: float = 1.0  # $ per worker-second (multiplier base)
     cf_price_multiplier: float = 10.0
+    # every live query runs this reduced shape (q.work is normalized at
+    # submit — the legacy engine did the same implicitly)
     prompt_tokens: int = 32
     decode_tokens: int = 4
+    #: decode chunk (= stage) size: the preemption/spill granularity
+    decode_chunk_tokens: int = 2
 
 
 class LiveEngine:
-    """Thread-backed mirror of the simulator's cluster pair."""
+    """Thread-backed mirror of the simulated service: same ServiceLayer,
+    same schedulers, same QueryCoordinator, same PoolSpec registry —
+    driving real jitted models instead of a cost model."""
 
     def __init__(self, cfg: LiveConfig):
         self.cfg = cfg
-        self.pool = _ModelPool()
-        self.vm_queue: "queue.Queue[Optional[Query]]" = queue.Queue()
-        self.cf_pool = ThreadPoolExecutor(max_workers=16)
-        self.relaxed: list[Query] = []
-        self.boe: list[Query] = []
+        self.models = _ModelPool(cfg.prompt_tokens, cfg.decode_tokens)
         self.done: list[Query] = []
-        self._lock = threading.Lock()
-        self._vm_busy = 0
+        self.failed: list[Query] = []
+        self._lock = threading.RLock()  # service layer + result sinks
+        self._ckpt: dict[int, DecodeCheckpoint] = {}
+        self._ckpt_mu = threading.Lock()
         self._t0 = time.monotonic()
         self._stop = threading.Event()
-        self._vm_thread = threading.Thread(target=self._vm_loop, daemon=True)
-        self._sched_thread = threading.Thread(target=self._sched_loop, daemon=True)
-        self._vm_thread.start()
+        specs = cfg.pools
+        if specs is None:
+            specs = default_live_pool_specs(
+                cf_startup_s=cfg.cf_startup_s,
+                cf_price_multiplier=cfg.cf_price_multiplier,
+            )
+        self.pools = [build_live_pool(spec, engine=self) for spec in specs]
+        self.coordinator = QueryCoordinator(
+            self.pools, policy=cfg.policy, cfg=cfg.sla
+        )
+        self.coordinator.wire_rehoming()
+        self.service = ServiceLayer(self.coordinator, cfg.sla, cfg.sla_enabled)
+        for pool in self.pools:  # consume only once rehoming is wired
+            pool.start()
+        self._sched_thread = threading.Thread(
+            target=self._sched_loop, name="live-sched", daemon=True
+        )
         self._sched_thread.start()
 
     # ------------------------------------------------------------------
     def now(self) -> float:
         return time.monotonic() - self._t0
 
-    def _run_query(self, q: Query, price: float) -> None:
-        model, params = self.pool.get(q.work.arch)
-        cfg = model.cfg
-        q.start_time = self.now()
-        toks = jax.random.randint(
-            jax.random.PRNGKey(q.qid),
-            (max(1, q.work.batch), self.cfg.prompt_tokens),
-            0,
-            cfg.vocab_size,
+    @property
+    def vm_run_queue_len(self) -> int:  # legacy observability hook
+        return self.coordinator.vm.run_queue_len
+
+    def live_work(self, work: QueryWork) -> QueryWork:
+        """Normalize a work descriptor to the reduced shape the live
+        models actually run (every query shares one jit footprint)."""
+        return replace(
+            work,
+            kind="serve",
+            prompt_tokens=self.cfg.prompt_tokens,
+            output_tokens=self.cfg.decode_tokens,
         )
-        kw = {}
-        if cfg.is_encoder_decoder:
-            kw["enc_embeds"] = jnp.zeros(
-                (toks.shape[0], toks.shape[1], cfg.d_model), jnp.float32
-            )
-        if cfg.frontend == "vision_patches":
-            kw["frontend_embeds"] = jnp.zeros(
-                (toks.shape[0], cfg.frontend_tokens, cfg.d_model), jnp.float32
-            )
-        logits, cache = model.prefill(
-            params, toks, kv_len=self.cfg.prompt_tokens + self.cfg.decode_tokens + 8,
-            dtype=jnp.float32, **kw,
+
+    def price_menu(self, work: QueryWork):
+        """Admission-time price menu quoted from the LIVE registry —
+        per-pool Quote rows from the same pools queries execute on."""
+        from .insights import price_menu
+
+        return price_menu(
+            self.live_work(work),
+            pools=self.pools,
+            relaxed_deadline_s=self.cfg.sla.relaxed_deadline_s,
         )
-        tok = jnp.argmax(logits, -1)[:, None]
-        for _ in range(self.cfg.decode_tokens):
-            logits, cache = model.decode_step(params, cache, tok, dtype=jnp.float32)
-            tok = jnp.argmax(logits, -1)[:, None]
-        jax.block_until_ready(tok)
+
+    # --- checkpoint store (host-shared across pools) -------------------
+    def _save_ckpt(self, q: Query, ck: DecodeCheckpoint) -> None:
+        with self._ckpt_mu:
+            self._ckpt[q.qid] = ck
+
+    def _load_ckpt(self, q: Query) -> DecodeCheckpoint:
+        with self._ckpt_mu:
+            ck = self._ckpt.get(q.qid)
+        if ck is None:
+            raise RuntimeError(
+                f"no checkpoint for Q{q.qid} at stage {q.stage_cursor}"
+            )
+        return ck
+
+    def _drop_ckpt(self, q: Query) -> None:
+        with self._ckpt_mu:
+            self._ckpt.pop(q.qid, None)
+
+    # --- result sinks (called from worker threads) ---------------------
+    def _finish(self, q: Query) -> None:
         q.finish_time = self.now()
-        q.chip_seconds = q.finish_time - q.start_time  # 1 "chip" worker
-        q.cost = q.chip_seconds * price
+        q.state = "done"
+        self._drop_ckpt(q)
         with self._lock:
             self.done.append(q)
 
-    # ------------------------------------------------------------------
-    def _vm_loop(self) -> None:
-        while not self._stop.is_set():
-            try:
-                q = self.vm_queue.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            if q is None:
-                break
-            self._vm_busy += 1
-            try:
-                self._run_query(q, self.cfg.vm_price)
-            finally:
-                self._vm_busy -= 1
-                self.vm_queue.task_done()
-
-    @property
-    def vm_run_queue_len(self) -> int:
-        return self.vm_queue.qsize() + self._vm_busy
-
-    def _route(self, q: Query) -> None:
-        q.dequeue_time = self.now()
-        overloaded = self.vm_run_queue_len >= self.cfg.sla.vm_overload_threshold
-        sla = q.effective_sla
-        if self.cfg.policy is Policy.FORCE:
-            to_vm = sla in (ServiceLevel.RELAXED, ServiceLevel.BEST_EFFORT) or not overloaded
-        else:
-            to_vm = not overloaded
-        if to_vm:
-            q.cluster = "vm"
-            self.vm_queue.put(q)
-        else:
-            q.cluster = "cf"
-
-            def run_cf():
-                time.sleep(self.cfg.cf_startup_s)  # provisioning latency
-                self._run_query(q, self.cfg.vm_price * self.cfg.cf_price_multiplier)
-
-            self.cf_pool.submit(run_cf)
-
-    def _sched_loop(self) -> None:
-        scfg = self.cfg.sla
-        while not self._stop.is_set():
-            now = self.now()
-            with self._lock:
-                # relaxed: overload-aware with deadline force-submit
-                while self.relaxed:
-                    head = self.relaxed[0]
-                    near = now - head.submit_time >= scfg.relaxed_deadline_s * scfg.deadline_slack
-                    can = self.vm_run_queue_len < scfg.vm_overload_threshold
-                    if not (near or can):
-                        break
-                    self._route(self.relaxed.pop(0))
-                # BoE: drain one when idle
-                if self.boe and self.vm_run_queue_len <= scfg.boe_idle_threshold:
-                    self._route(self.boe.pop(0))
-            time.sleep(scfg.poll_period_s)
+    def _fail(self, q: Query, err: BaseException) -> None:
+        with self._lock:
+            if q.state == "failed":  # belt-and-braces double report
+                return
+            q.finish_time = self.now()
+            q.state = "failed"
+            q.error = f"{type(err).__name__}: {err}"
+            self.failed.append(q)
+        self._drop_ckpt(q)
 
     # ------------------------------------------------------------------
     def submit(self, q: Query) -> None:
         q.submit_time = self.now()
-        q.effective_sla = q.sla if self.cfg.sla_enabled else ServiceLevel.IMMEDIATE
-        if q.effective_sla is ServiceLevel.IMMEDIATE:
-            self._route(q)
-        elif q.effective_sla is ServiceLevel.RELAXED:
+        q.work = self.live_work(q.work)
+        with self._lock:
+            self.service.submit(q, q.submit_time)
+
+    def _sched_loop(self) -> None:
+        while not self._stop.is_set():
             with self._lock:
-                self.relaxed.append(q)
-        else:
-            with self._lock:
-                self.boe.append(q)
+                self.service.poll(self.now())
+            time.sleep(self.cfg.sla.poll_period_s)
 
     def drain(self, n_expected: int, timeout: float = 120.0) -> list[Query]:
-        t0 = time.monotonic()
-        while time.monotonic() - t0 < timeout:
+        """Block until n_expected queries have COMPLETED — done or
+        failed — or the timeout passes. Failures count toward
+        completion, so a raising query surfaces immediately instead of
+        making the drain sit out its full timeout."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
             with self._lock:
-                if len(self.done) >= n_expected:
+                if len(self.done) + len(self.failed) >= n_expected:
                     break
-            time.sleep(0.05)
+            time.sleep(0.02)
         self.shutdown()
-        return list(self.done)
+        with self._lock:
+            return list(self.done) + list(self.failed)
 
     def shutdown(self) -> None:
         self._stop.set()
-        self.vm_queue.put(None)
-        self.cf_pool.shutdown(wait=True)
+        for pool in self.pools:
+            pool.stop()
+        self._sched_thread.join(timeout=5.0)

@@ -131,6 +131,48 @@ def build_pool(
     return pool
 
 
+def build_live_pool(spec: PoolSpec, *, engine) -> ClusterExecutor:
+    """Live counterpart of `build_pool`: the same PoolSpec vocabulary
+    instantiates thread-backed executors that run real jitted model work
+    on this host (core/live.py):
+
+      kind="reserved" -> LiveReservedPool (one serialized worker thread
+                         per chip — the interference-free tier)
+      kind="elastic"  -> LiveElasticPool (a task pool of up to `chips`
+                         threads with a provisioning sleep of startup_s)
+
+    `engine` is the owning LiveEngine (model pool, clock, checkpoint
+    store, result sinks). Imported lazily: the live classes pull in jax
+    and the model zoo, which the simulator never needs."""
+    from .live import LiveElasticPool, LiveReservedPool
+
+    if spec.kind == "elastic":
+        return LiveElasticPool(spec, engine)
+    if spec.kind == "reserved":
+        return LiveReservedPool(spec, engine)
+    raise ValueError(f"unknown pool kind {spec.kind!r} for {spec.name!r}")
+
+
+def default_live_pool_specs(
+    *,
+    cf_startup_s: float = 0.3,
+    cf_price_multiplier: float = 10.0,
+) -> list[PoolSpec]:
+    """The legacy live pair: one serialized cost-efficient worker thread
+    and a 16-way elastic thread pool with a provisioning sleep — the
+    pre-registry LiveEngine, now expressed as two PoolSpecs."""
+    return [
+        PoolSpec(name="vm", kind="reserved", chips=1),
+        PoolSpec(
+            name="cf",
+            kind="elastic",
+            chips=16,
+            startup_s=cf_startup_s,
+            price_multiplier=cf_price_multiplier,
+        ),
+    ]
+
+
 def default_pool_specs(
     *,
     vm_chips: int = 4,

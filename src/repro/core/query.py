@@ -53,12 +53,15 @@ class Query:
     chip_seconds: float = 0.0
     cost: float = 0.0
     retries: int = 0
+    #: live engine only: the error string when execution raised
+    #: (state == "failed"); the simulator's fault model retries instead
+    error: Optional[str] = None
 
     # stage-level engine state (core/engine.py): a running query is a
     # cursor over its StagePlan; the cursor survives preemption and
     # cross-cluster spill, so completed stages are never re-run.
     stage_cursor: int = 0  # next stage index to execute
-    state: str = "pending"  # pending|running|preempted|spilled|spilled-back|done
+    state: str = "pending"  # pending|running|preempted|spilled|spilled-back|done|failed
     preemptions: int = 0
     spilled: bool = False
     spill_backs: int = 0  # returns from an elastic pool to a reserved one

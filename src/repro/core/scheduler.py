@@ -154,10 +154,12 @@ class QueryCoordinator:
         pool = pool or self.vm
         if q.current_sla is ServiceLevel.BEST_EFFORT:
             return False
+        # snapshot: live pools mutate `waiting` from worker threads while
+        # this policy runs at another worker's stage boundary
         displacing_waiter = any(
             w.current_sla is not ServiceLevel.BEST_EFFORT
             and w.current_sla <= q.current_sla
-            for w in pool.waiting
+            for w in list(pool.waiting)
         )
         if not displacing_waiter:
             return False

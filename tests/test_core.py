@@ -282,6 +282,38 @@ def test_price_menu_orders_levels():
     assert menu["immediate"].est_pending_s == 0.0
     assert menu["relaxed"].est_pending_s == 300.0
     assert menu["immediate"].est_exec_s < menu["relaxed"].est_exec_s
+    # the legacy knob pair reports which pool backs each level
+    assert menu["immediate"].pool == "cf"
+    assert menu["relaxed"].pool == "vm"
+
+
+def test_price_menu_quotes_pool_registry():
+    """Pool-aware frontier: the menu is quoted from per-pool rows of an
+    executor registry — each pool's own cost model, slice sizing, and
+    unit price — instead of the hardcoded vm/cf knobs."""
+    from repro.core import PoolSpec, build_pool, price_menu
+
+    w = QueryWork(arch="granite-8b", prompt_tokens=500_000, output_tokens=16)
+    specs = [
+        PoolSpec(name="vm", kind="reserved", chips=4),
+        PoolSpec(name="spot", kind="reserved", chips=64, slice_chips=16,
+                 speed_factor=0.25, price_multiplier=0.15),
+        PoolSpec(name="cf", kind="elastic", chips=64,
+                 price_multiplier=10.0),
+    ]
+    pools = [build_pool(s, use_calibration=False) for s in specs]
+    menu = {q.sla: q for q in price_menu(w, pools=pools)}
+    # relaxed/BoE ride the cheapest reserved pool: the slow spot tier
+    assert menu["relaxed"].pool == "spot"
+    assert menu["best_effort"].est_cost == menu["relaxed"].est_cost
+    # immediate is priced at the worst-case (elastic) pool
+    assert menu["immediate"].pool == "cf"
+    assert menu["immediate"].est_cost > menu["relaxed"].est_cost
+    assert menu["immediate"].est_exec_s < menu["relaxed"].est_exec_s
+    # registry quotes agree with the pools they came from
+    q = Query(work=w, sla=ServiceLevel.IMMEDIATE, submit_time=0.0)
+    cf = next(p for p in pools if p.name == "cf")
+    assert menu["immediate"].est_cost == pytest.approx(cf.quote_cost(q), rel=1e-6)
 
 
 def test_cost_explorer_brush_and_trace(tmp_path):

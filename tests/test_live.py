@@ -1,0 +1,359 @@
+"""Live engine on the pool registry (core/live.py): stage-boundary
+checkpointing makes preemption / spill / spill-back EXACT on real jitted
+model work, failures surface instead of hanging the drain, and billing
+flows through the same per-stage accounting as the simulator.
+
+Every test runs under a hard SIGALRM timeout: a hung drain (the bug
+class this file guards against) fails fast instead of stalling CI."""
+import os
+import signal
+import threading
+import time
+
+import pytest
+
+from repro.core.live import LiveConfig, LiveEngine
+from repro.core.pools import PoolSpec
+from repro.core.query import Query, QueryWork
+from repro.core.sla import Policy, ServiceLevel, SLAConfig
+
+
+@pytest.fixture(autouse=True)
+def _hard_timeout():
+    """Per-test hard timeout: a live-engine regression that blocks (a
+    swallowed worker exception, a stuck drain) must fail the test, not
+    stall the whole workflow."""
+    if not hasattr(signal, "SIGALRM"):  # pragma: no cover — non-POSIX
+        yield
+        return
+    limit = int(os.environ.get("LIVE_TEST_TIMEOUT_S", "180"))
+
+    def fire(signum, frame):
+        raise TimeoutError(f"live test exceeded the {limit}s hard timeout")
+
+    old = signal.signal(signal.SIGALRM, fire)
+    signal.alarm(limit)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+def _q(sla, arch="paper-default", batch=1):
+    return Query(work=QueryWork(arch=arch, batch=batch), sla=sla,
+                 submit_time=0.0)
+
+
+def _wait_until(pred, timeout=60.0, period=0.002):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(period)
+    return False
+
+
+def _assert_conserved(q, n_stages):
+    """Checkpointed execution conserves chip-seconds: every plan stage
+    ran exactly once (no re-billed chunks, no holes) and the query's
+    bill is exactly the sum of its stage trace."""
+    assert sorted(e.index for e in q.stage_trace) == list(range(n_stages))
+    assert sum(e.chip_seconds for e in q.stage_trace) == pytest.approx(
+        q.chip_seconds
+    )
+    assert sum(e.cost for e in q.stage_trace) == pytest.approx(q.cost)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: checkpointed preemption — exact resume on real work
+# ---------------------------------------------------------------------------
+
+def test_preempt_resumes_from_checkpoint_without_rebilling():
+    """An IMMEDIATE arrival bumps a running BEST_EFFORT query at a chunk
+    boundary; the BoE query resumes from its decode checkpoint and never
+    re-runs a completed chunk."""
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=1)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000,
+                      preempt_best_effort=True),
+        decode_tokens=192, decode_chunk_tokens=1,
+    ))
+    n_stages = 1 + 192
+    boe = _q(ServiceLevel.BEST_EFFORT)
+    imm = _q(ServiceLevel.IMMEDIATE)
+    eng.submit(boe)
+    # wait until the BoE query is mid-plan, then submit the IMMEDIATE
+    assert _wait_until(lambda: 0 < len(boe.stage_trace) < n_stages - 10)
+    eng.submit(imm)
+    done = eng.drain(2, timeout=120)
+    assert len(done) == 2
+    assert boe.state == "done" and imm.state == "done"
+    assert boe.preemptions >= 1
+    assert imm.finish_time < boe.finish_time  # the preemptor cut the line
+    _assert_conserved(boe, n_stages)
+    _assert_conserved(imm, n_stages)
+    # chip-seconds already spent before preemption stayed billed
+    assert boe.chip_seconds > 0 and boe.cost == pytest.approx(boe.chip_seconds)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: mid-query spill to the elastic pool at the elastic price
+# ---------------------------------------------------------------------------
+
+def test_spill_lands_remaining_stages_on_elastic_at_elastic_price():
+    eng = LiveEngine(LiveConfig(
+        policy=Policy.AUTO,
+        cf_startup_s=0.02,
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=2, spill_enabled=True,
+                      spill_min_remaining_s=0.0),
+        decode_tokens=192, decode_chunk_tokens=1,
+    ))
+    n_stages = 1 + 192
+    rel = _q(ServiceLevel.RELAXED)
+    imm = _q(ServiceLevel.IMMEDIATE)
+    eng.submit(rel)
+    assert _wait_until(lambda: 0 < len(rel.stage_trace) < n_stages - 10)
+    eng.submit(imm)  # vm not overloaded (1 running < 2) -> waits on vm
+    done = eng.drain(2, timeout=120)
+    assert len(done) == 2 and rel.state == "done"
+    assert rel.spilled and rel.cluster == "cf"
+    _assert_conserved(rel, n_stages)
+    by_pool = {}
+    for e in rel.stage_trace:
+        by_pool.setdefault(e.cluster, []).append(e)
+    assert set(by_pool) == {"vm", "cf"}
+    # remaining stages billed at the elastic unit price, earlier at vm's
+    for e in by_pool["vm"]:
+        assert e.cost == pytest.approx(e.chip_seconds * eng.cfg.vm_price)
+    for e in by_pool["cf"]:
+        assert e.cost == pytest.approx(
+            e.chip_seconds * eng.cfg.vm_price * eng.cfg.cf_price_multiplier
+        )
+    # the spill is a clean split: vm ran a prefix, cf ran the suffix
+    first_cf = min(e.index for e in by_pool["cf"])
+    assert max(e.index for e in by_pool["vm"]) < first_cf
+
+
+def test_spill_back_returns_remaining_stages_to_reserved():
+    """Symmetric spill: a spilled query hands its remaining stages back
+    to an idle reserved pool at its next chunk boundary."""
+    eng = LiveEngine(LiveConfig(
+        cf_startup_s=0.02,
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=2,
+                      spill_back_enabled=True,
+                      spill_min_remaining_s=0.0,
+                      spill_back_low_backlog_s=30.0),
+        decode_tokens=64, decode_chunk_tokens=1,
+    ))
+    n_stages = 1 + 64
+    q = _q(ServiceLevel.RELAXED)
+    q.work = eng.live_work(q.work)
+    q.effective_sla = ServiceLevel.RELAXED
+    q.spilled = True  # arrived here via a spill; vm has since gone idle
+    q.submit_time = q.dequeue_time = eng.now()
+    eng.coordinator.by_name["cf"].submit(q, eng.now())
+    done = eng.drain(1, timeout=120)
+    assert done == [q] and q.state == "done"
+    assert q.spill_backs >= 1 and q.cluster == "vm"
+    _assert_conserved(q, n_stages)
+    clusters = [e.cluster for e in q.stage_trace]
+    assert clusters[0] == "cf" and clusters[-1] == "vm"
+
+
+# ---------------------------------------------------------------------------
+# satellite: failures surface; drain never waits out its timeout
+# ---------------------------------------------------------------------------
+
+def test_failed_query_surfaces_and_drain_returns_promptly():
+    eng = LiveEngine(LiveConfig(
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=2),
+    ))
+
+    def boom(arch, batch):
+        raise RuntimeError("injected model failure")
+
+    eng.models.ensure = boom
+    q = _q(ServiceLevel.IMMEDIATE)
+    t0 = time.monotonic()
+    eng.submit(q)
+    done = eng.drain(1, timeout=60.0)
+    took = time.monotonic() - t0
+    assert q in done
+    assert q.state == "failed"
+    assert "injected model failure" in q.error
+    assert q.finish_time is not None
+    assert took < 10.0, f"drain waited {took:.1f}s on a failed query"
+
+
+def test_drain_timeout_honored_against_deep_backlog():
+    """A timed-out drain must not secretly run the whole backlog to
+    completion during shutdown: started queries abandon at their next
+    chunk boundary, queued ones are dropped."""
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=1)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+        decode_tokens=256, decode_chunk_tokens=256,  # ~one long chunk
+    ))
+    eng.models.ensure("paper-default", 1)  # compile outside the window
+    n = 12
+    for _ in range(n):
+        eng.submit(_q(ServiceLevel.IMMEDIATE))
+    t0 = time.monotonic()
+    done = eng.drain(n, timeout=0.2)
+    took = time.monotonic() - t0
+    # the backlog (~n long decode chunks on one worker) was NOT drained
+    assert len(done) < n
+    assert took < 5.0, f"drain+shutdown took {took:.1f}s on a deep backlog"
+
+
+def test_failure_does_not_block_other_queries():
+    eng = LiveEngine(LiveConfig(
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=2),
+    ))
+    real_ensure = eng.models.ensure
+
+    def selective(arch, batch):
+        if arch == "qwen2-0.5b":
+            raise RuntimeError("injected: bad arch")
+        return real_ensure(arch, batch)
+
+    eng.models.ensure = selective
+    bad = _q(ServiceLevel.IMMEDIATE, arch="qwen2-0.5b")
+    good = _q(ServiceLevel.IMMEDIATE)
+    eng.submit(bad)
+    eng.submit(good)
+    done = eng.drain(2, timeout=120)
+    assert len(done) == 2
+    assert bad.state == "failed" and "bad arch" in bad.error
+    assert good.state == "done" and good.cost > 0
+    _assert_conserved(good, len(good.stage_trace))
+
+
+# ---------------------------------------------------------------------------
+# satellite: routing under concurrent submits (the _vm_busy race)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_submits_route_and_account_consistently():
+    """Regression for the unlocked `_vm_busy` counter: hammer submits
+    from several threads and verify the queue-state the router reads
+    never corrupts — every query completes exactly once, fully billed,
+    and the pools end empty."""
+    eng = LiveEngine(LiveConfig(
+        policy=Policy.AUTO,
+        cf_startup_s=0.01,
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=2),
+    ))
+    n_threads, per_thread = 4, 6
+    queries = [_q(ServiceLevel.IMMEDIATE)
+               for _ in range(n_threads * per_thread)]
+
+    def submit_block(i):
+        for q in queries[i * per_thread:(i + 1) * per_thread]:
+            eng.submit(q)
+
+    threads = [threading.Thread(target=submit_block, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    done = eng.drain(len(queries), timeout=120)
+    assert len(done) == len(queries)
+    assert len({q.qid for q in done}) == len(queries)  # no duplicates
+    assert all(q.state == "done" for q in done)
+    clusters = {q.cluster for q in done}
+    assert "vm" in clusters and "cf" in clusters  # overflow engaged
+    for q in done:
+        _assert_conserved(q, len(q.stage_trace))
+        price = eng.cfg.vm_price * (
+            eng.cfg.cf_price_multiplier
+            if all(e.cluster == "cf" for e in q.stage_trace) else 1.0
+        )
+        if len({e.cluster for e in q.stage_trace}) == 1:
+            assert q.cost == pytest.approx(q.chip_seconds * price)
+    for pool in eng.pools:
+        assert pool.run_queue_len == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: single-pool run matches the whole-query engine's totals
+# ---------------------------------------------------------------------------
+
+def test_single_pool_matches_whole_query_totals():
+    """With one pool and no preempt/spill, chunked execution bills the
+    same window the old whole-query engine did: the sum of stage walls
+    is the query's exec window (minus only inter-stage bookkeeping),
+    at the reserved unit price."""
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=1)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+    ))
+    qs = [_q(ServiceLevel.IMMEDIATE) for _ in range(3)]
+    for q in qs:
+        eng.submit(q)
+    done = eng.drain(len(qs), timeout=120)
+    assert len(done) == len(qs)
+    # prefill + ceil(4 / 2) decode chunks
+    n_stages = 1 + -(-eng.cfg.decode_tokens // eng.cfg.decode_chunk_tokens)
+    for q in done:
+        assert q.state == "done" and q.cluster == "vm"
+        _assert_conserved(q, n_stages)
+        assert q.cost == pytest.approx(q.chip_seconds * eng.cfg.vm_price)
+        # billed chip-seconds ARE the execution window (stage walls are
+        # contiguous inside it); jit compile is warmed outside it
+        assert q.chip_seconds <= q.exec_time + 1e-9
+        assert q.chip_seconds == pytest.approx(q.exec_time, rel=0.5)
+
+
+def test_first_query_not_billed_for_jit_compile():
+    """Billing skew fix: the first query of an arch pays the same
+    chip-seconds as a later identical query, because compilation is
+    warmed outside the billed window (recorded in models.compile_s)."""
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=1)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+    ))
+    first, second = _q(ServiceLevel.IMMEDIATE), _q(ServiceLevel.IMMEDIATE)
+    eng.submit(first)
+    eng.submit(second)
+    done = eng.drain(2, timeout=120)
+    assert len(done) == 2
+    compile_s = eng.models.compile_s[("paper-default", 1)]
+    assert compile_s > 0.0
+    # the first query's bill must not carry the compile time: it is the
+    # same order as the warm second query, far below compile_s
+    assert first.chip_seconds < compile_s / 4
+    assert second.chip_seconds < compile_s / 4
+
+
+# ---------------------------------------------------------------------------
+# the live registry answers the same placement questions as the sim's
+# ---------------------------------------------------------------------------
+
+def test_live_price_menu_quotes_from_registry():
+    eng = LiveEngine(LiveConfig())
+    try:
+        menu = {m.sla: m for m in eng.price_menu(QueryWork())}
+        assert menu["immediate"].pool == "cf"
+        assert menu["relaxed"].pool == "vm"
+        assert menu["relaxed"].est_cost < menu["immediate"].est_cost
+        assert menu["best_effort"].est_cost == menu["relaxed"].est_cost
+        assert menu["immediate"].est_pending_s == 0.0
+        est = eng.coordinator.estimate(
+            Query(work=eng.live_work(QueryWork()),
+                  sla=ServiceLevel.IMMEDIATE, submit_time=0.0)
+        )
+        assert set(est) == {"vm", "cf"}
+        assert est["cf"]["cost"] > est["vm"]["cost"]
+    finally:
+        eng.shutdown()
