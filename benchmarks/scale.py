@@ -98,7 +98,7 @@ def _report(sim: Simulation, res, wall: float, n: int) -> dict:
         "spilled": s["spilled"],
         "spill_backs": s["spill_backs"],
         "provisioned_cs": int(provisioned),
-        "vm_share": round(s["vm_share"], 3),
+        "vm_share": round(s.get("vm_share", 0.0), 3),
         "finished": s["finished"],
     }
 

@@ -6,6 +6,12 @@ from .clusters import (
     FaultModel,
     HighElasticCluster,
 )
+from .calibration import (
+    CalibrationTable,
+    LiveCalibrator,
+    fit_dryruns,
+    invalidate_default_calibration,
+)
 from .engine import ClusterExecutor, StageEvent
 from .insights import CostExplorer, export_trace, price_menu
 from .cost_model import CostModel, Stage, StagePlan

@@ -3,24 +3,28 @@ suitable for flexible SLAs (paper §3.3 vision 1).
 
 A query compiles to a chain of stages; every stage has a roofline time on
 a given worker slice, derived from the same three-term model as
-EXPERIMENTS.md §Roofline. When a dry-run JSON for the (arch, shape) exists
-in results/dryrun/, an empirical calibration factor (compiled HLO terms /
-analytic terms) is applied, closing the loop between the compiled
-artifacts and the scheduler simulation.
+EXPERIMENTS.md §Roofline. Empirical calibration (core/calibration.py)
+closes the loop between measurements and the scheduler: a
+``CalibrationTable`` — fitted offline from dry-run JSONs or online from
+measured stage walls — scales stage times (never plan structure), and
+every table update invalidates the plan cache via a version check, so a
+mid-run hot swap flows into quotes immediately.
 """
 from __future__ import annotations
 
-import json
 import math
 from dataclasses import dataclass, field
-from functools import cached_property, lru_cache
+from functools import cached_property
 from pathlib import Path
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 from ..configs import get_config
 from ..models.config import ModelConfig
 from ..perf.hw import V5E, HwSpec
 from .query import QueryWork
+
+if TYPE_CHECKING:  # pragma: no cover — import cycle guard
+    from .calibration import CalibrationTable
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
@@ -73,24 +77,6 @@ class StagePlan:
         return self._suffix_cs[min(cursor, len(self.stages))]
 
 
-@lru_cache(maxsize=None)
-def _calibration(arch: str, kind: str) -> float:
-    """HLO-derived step time / analytic step time, from dry-run records."""
-    shape = {"serve": "prefill_32k", "train": "train_4k"}[kind]
-    path = RESULTS / f"{arch}__{shape}__16x16.json"
-    if not path.exists():
-        return 1.0
-    try:
-        rec = json.loads(path.read_text())
-        terms = rec["roofline"]["terms"]
-        cfg = get_config(arch)
-        cell_tokens = {"prefill_32k": 32 * 32768, "train_4k": 256 * 4096}[shape]
-        an = _analytic_step(cfg, cell_tokens, kind, chips=rec["chips"])
-        return max(0.25, min(20.0, terms["step_s"] / an)) if an else 1.0
-    except Exception:
-        return 1.0
-
-
 def _analytic_step(cfg: ModelConfig, tokens: int, kind: str, chips: int,
                    hw: HwSpec = V5E) -> float:
     """Analytic roofline step time for `tokens` processed on `chips`."""
@@ -107,22 +93,34 @@ def _analytic_step(cfg: ModelConfig, tokens: int, kind: str, chips: int,
 def _decode_step_time(cfg: ModelConfig, batch: int, context: int, chips: int,
                       hw: HwSpec = V5E) -> float:
     """One decode token for `batch` sequences at a given context length."""
+    return _decode_chunk_time(cfg, batch, context, 1, chips, hw)
+
+
+def _decode_chunk_time(cfg: ModelConfig, batch: int, context0: int, n: int,
+                       chips: int, hw: HwSpec = V5E) -> float:
+    """Exact time of `n` consecutive decode tokens whose first token
+    reads a KV cache of `context0` tokens: token j is priced at context
+    ``context0 + j``. Summing per token makes a generation's total
+    independent of how it is chunked (chunk boundaries are a scheduling
+    choice, not a cost), while later chunks correctly pay for the longer
+    cache they read — the old model priced every chunk at the INITIAL
+    context, systematically under-quoting long generations."""
     n_active = cfg.active_params()
-    flops = 2 * n_active * batch
-    kv = 0
-    for w in cfg.window_pattern():
-        if cfg.attention_free:
-            break
-        eff = min(w, context) if w else context
-        kv += 2 * eff * cfg.num_kv_heads * cfg.head_dim * 2  # k+v bf16
+    compute = 2 * n_active * batch / (chips * hw.peak_flops_bf16)
     ssm = 0
     if cfg.ssm_state:
         n_mamba = sum(1 for k in cfg.layer_kinds() if k == "mamba")
         ssm = n_mamba * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
-    bytes_ = 2 * n_active + batch * (kv + ssm)
-    compute = flops / (chips * hw.peak_flops_bf16)
-    memory = bytes_ / (chips * hw.hbm_bandwidth)
-    return max(compute, memory)
+    windows = () if cfg.attention_free else tuple(cfg.window_pattern())
+    kv_unit = 2 * cfg.num_kv_heads * cfg.head_dim * 2  # k+v bf16 per tok
+    bw = chips * hw.hbm_bandwidth
+    total = 0.0
+    for j in range(n):
+        context = context0 + j
+        kv = sum((min(w, context) if w else context) for w in windows)
+        bytes_ = 2 * n_active + batch * (kv * kv_unit + ssm)
+        total += max(compute, bytes_ / bw)
+    return total
 
 
 class CostModel:
@@ -139,28 +137,81 @@ class CostModel:
     ``speed_factor`` models heterogeneous pool hardware relative to the
     `hw` baseline: a 0.25x pool (e.g. CPU spot) runs every stage 4x
     longer — and bills 4x the chip-seconds — on the same plan structure.
+
+    ``calibration`` injects an explicit ``CalibrationTable``
+    (core/calibration.py): its per-(arch, kind) factors scale stage
+    times and its fitted ``speed_factor`` (when set) overrides the
+    declared one. The table is LIVE state — any update bumps its
+    version, and ``plan`` clears the plan cache on a version change, so
+    a calibration hot swap flows into the very next quote. An injected
+    table applies regardless of ``use_calibration``, which only gates
+    the process-wide default table over ``results/dryrun``.
     """
 
     def __init__(self, hw: HwSpec = V5E, use_calibration: bool = True,
-                 decode_chunk_tokens: int = 32, speed_factor: float = 1.0):
+                 decode_chunk_tokens: int = 32, speed_factor: float = 1.0,
+                 calibration: Optional["CalibrationTable"] = None):
         if speed_factor <= 0:
             raise ValueError(f"speed_factor must be > 0, got {speed_factor}")
         self.hw = hw
         self.use_calibration = use_calibration
         self.decode_chunk_tokens = decode_chunk_tokens
         self.speed_factor = speed_factor
-        self._plan_cache: dict[tuple, StagePlan] = {}
+        self.calibration = calibration
+        # key -> (table version the plan was computed under, plan);
+        # entries are version-tagged so a plan computed concurrently
+        # with a hot swap can never be served under the NEW version
+        self._plan_cache: dict[tuple, tuple[int, StagePlan]] = {}
+        self._cal_version = -1
+
+    def _table(self) -> Optional["CalibrationTable"]:
+        if self.calibration is not None:
+            return self.calibration
+        if self.use_calibration:
+            from .calibration import default_table
+
+            return default_table()
+        return None
+
+    def set_calibration(self, table: Optional["CalibrationTable"]) -> None:
+        """Swap the injected table (None reverts to the default/none).
+        Safe at any stage boundary: calibration scales times, never plan
+        structure, so mid-plan stage cursors stay valid."""
+        self.calibration = table
+        self.invalidate_cache()
+
+    def invalidate_cache(self) -> None:
+        self._plan_cache.clear()
+        self._cal_version = -1
+
+    @property
+    def effective_speed_factor(self) -> float:
+        """The speed quotes are made at: the table's fitted value when
+        one exists, the declared constant otherwise."""
+        t = self._table()
+        if t is not None and t.speed_factor is not None:
+            return t.speed_factor
+        return self.speed_factor
 
     def _cal(self, arch: str, kind: str) -> float:
-        cal = _calibration(arch, kind) if self.use_calibration else 1.0
-        return cal / self.speed_factor
+        t = self._table()
+        cal = t.factor(arch, kind) if t is not None else 1.0
+        return cal / self.effective_speed_factor
 
     def plan(self, work: QueryWork, chips: int) -> StagePlan:
+        # versioned cache: a calibration update (hot swap, re-fit,
+        # default-table invalidation) must reach the next plan() call —
+        # the old cache never invalidated, so updates silently no-opped
+        table = self._table()
+        ver = table.version if table is not None else 0
+        if ver != self._cal_version:
+            self._plan_cache.clear()
+            self._cal_version = ver
         key = (work.arch, work.kind, work.batch, work.prompt_tokens,
                work.output_tokens, work.train_steps, work.seq_len, chips)
         cached = self._plan_cache.get(key)
-        if cached is not None:
-            return cached
+        if cached is not None and cached[0] == ver:
+            return cached[1]
         cfg = get_config(work.arch)
         cal = self._cal(work.arch, work.kind)
         stages: list[Stage] = []
@@ -173,19 +224,24 @@ class CostModel:
             )
             stages.append(Stage("prefill", cal * tp, chips))
             if work.output_tokens:
-                td = _decode_step_time(
-                    cfg, work.batch, work.prompt_tokens, chips
-                )
                 chunk = self.decode_chunk_tokens or work.output_tokens
                 done = 0
                 while done < work.output_tokens:
+                    # each chunk pays for the KV cache grown by the
+                    # chunks before it (token-exact, so chunking never
+                    # changes the total). Context depends only on the
+                    # work, so plan STRUCTURE stays chips/speed-
+                    # independent and cursors survive pool hops.
                     n = min(chunk, work.output_tokens - done)
+                    t_chunk = _decode_chunk_time(
+                        cfg, work.batch, work.prompt_tokens + done, n, chips
+                    )
                     stages.append(
-                        Stage(f"decode[{done}:{done + n}]", cal * td * n, chips)
+                        Stage(f"decode[{done}:{done + n}]", cal * t_chunk, chips)
                     )
                     done += n
         out = StagePlan(tuple(stages))
-        self._plan_cache[key] = out
+        self._plan_cache[key] = (ver, out)
         return out
 
     def exec_time(self, work: QueryWork, chips: int) -> float:

@@ -150,6 +150,11 @@ class ClusterExecutor:
         #: stage-boundary re-placement hook, wired by the coordinator:
         #: (query, now) -> target pool, or None to keep the query here
         self.rehome: Optional[Callable[[Query, float], Optional["ClusterExecutor"]]] = None
+        #: observation hook called after every completed stage with
+        #: (query, planned_stage, event) — how a calibration loop reads
+        #: this pool's predicted-vs-actual stage walls without touching
+        #: the accounting path (core/calibration.py, benchmarks)
+        self.stage_observer: Optional[Callable[[Query, Stage, StageEvent], None]] = None
 
     # --- queue state the coordinator watches -------------------------
     @property
@@ -323,6 +328,12 @@ class ClusterExecutor:
         return run
 
     def _begin_stage(self, run: _Run, now: float) -> None:
+        # re-read the plan at every stage boundary: a calibration hot
+        # swap (versioned CostModel cache) must flow into the stages not
+        # yet begun. Structure is calibration-invariant, so the cursor
+        # stays valid; with no update this is a cache hit returning the
+        # same object.
+        run.plan = self.cost_model.plan(run.query.work, run.chips)
         stage = run.plan.stages[run.query.stage_cursor]
         work, billed, retries = self._stage_work(stage, run.query)
         run.stage_start = now
@@ -351,13 +362,15 @@ class ClusterExecutor:
         self._sync(t)
         q = run.query
         stage = run.plan.stages[q.stage_cursor]
-        account_stage(
+        ev = account_stage(
             q, stage=stage.name, cluster=self.name, start=run.stage_start,
             finish=t, chips=run.chips, billed_cs=run.billed_cs,
             price_per_chip_s=self.price_per_chip_s,
             retries=run.stage_retries,
         )
         self.stages_completed += 1
+        if self.stage_observer is not None:
+            self.stage_observer(q, stage, ev)
         if q.stage_cursor >= len(run.plan.stages):
             run.active = False
             del self.running[run]

@@ -74,6 +74,7 @@ def price_menu(
     *,
     pools: Optional[Iterable] = None,
     cost_model: Optional[CostModel] = None,
+    calibration=None,
     vm_chips: int = 4,
     cf_chips: int = 32,
     vm_price_s: float = 1.2 / 3600,
@@ -93,6 +94,13 @@ def price_menu(
     vm/cf knob pair prices the same rows as before — identical
     estimates whenever the elastic pool is the faster one (true for the
     default knobs: cf_chips > vm_chips)."""
+    if calibration is not None and (pools is not None or cost_model is not None):
+        raise ValueError(
+            "calibration only corrects the legacy knob pair — registry "
+            "pools (and explicit cost models) carry their own calibrated "
+            "models; a silently-ignored calibration would quote "
+            "uncorrected prices"
+        )
     if pools is not None:
         probe = Query(work=work, sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
         rows = []
@@ -108,7 +116,9 @@ def price_menu(
         if not rows:
             raise ValueError("price_menu needs at least one pool")
         return _menu_from_rows(rows, relaxed_deadline_s)
-    cm = cost_model or CostModel()
+    # legacy knob pair: an explicit CalibrationTable corrects both rows
+    # (registry pools carry their own calibrated models instead)
+    cm = cost_model or CostModel(calibration=calibration)
     rows = [
         _PoolRow("vm", "reserved", cm.exec_time(work, vm_chips),
                  cm.chip_seconds(work, vm_chips) * vm_price_s),
@@ -121,6 +131,23 @@ def price_menu(
 # ---------------------------------------------------------------------------
 # Q7: historical cost visibility (brushing-and-linking equivalent)
 # ---------------------------------------------------------------------------
+
+def cluster_shares(
+    queries: Iterable[Query], ndigits: Optional[int] = None
+) -> dict[str, float]:
+    """Per-pool placement shares over ``q.cluster`` (unplaced -> "?") —
+    the registry-shaped replacement for the hardcoded ``q.cluster ==
+    "vm"`` share, shared by CostExplorer.aggregate and
+    SimResult.summary."""
+    qs = list(queries)
+    counts: dict[str, int] = {}
+    for q in qs:
+        counts[q.cluster or "?"] = counts.get(q.cluster or "?", 0) + 1
+    n = max(1, len(qs))
+    return {
+        name: (round(c / n, ndigits) if ndigits is not None else c / n)
+        for name, c in sorted(counts.items())
+    }
 
 class CostExplorer:
     """Filter/aggregate finished queries the way the Web UI's linked
@@ -161,7 +188,11 @@ class CostExplorer:
         costs = np.array([q.cost for q in qs])
         execs = np.array([q.exec_time or 0.0 for q in qs])
         pend = np.array([q.pending_time or 0.0 for q in qs])
-        return {
+        # per-pool placement shares: an N-pool registry has no special
+        # "vm" — the old hardcoded `q.cluster == "vm"` share read 0 for
+        # any registry without that name
+        cluster_share = cluster_shares(qs, ndigits=3)
+        out = {
             "n": len(qs),
             "total_cost": round(float(costs.sum()), 4),
             "mean_cost": round(float(costs.mean()), 4),
@@ -169,10 +200,11 @@ class CostExplorer:
             "total_exec_s": round(float(execs.sum()), 1),
             "p95_exec_s": round(float(np.percentile(execs, 95)), 2),
             "p95_pending_s": round(float(np.percentile(pend, 95)), 2),
-            "vm_share": round(
-                sum(q.cluster == "vm" for q in qs) / len(qs), 3
-            ),
+            "cluster_share": cluster_share,
         }
+        if "vm" in cluster_share:  # legacy key, derived, only when real
+            out["vm_share"] = cluster_share["vm"]
+        return out
 
     def by(self, attr: str) -> dict[str, dict]:
         """Group-by + aggregate (the "linking" half)."""

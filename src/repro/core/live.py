@@ -41,7 +41,12 @@ from ..configs import get_config
 from ..models.transformer import LM
 from .cost_model import CostModel
 from .engine import ClusterExecutor, account_stage
-from .pools import PoolSpec, build_live_pool, default_live_pool_specs
+from .pools import (
+    PoolSpec,
+    build_live_pool,
+    default_live_pool_specs,
+    fit_spec_calibration,
+)
 from .query import Query, QueryWork
 from .scheduler import QueryCoordinator, ServiceLayer
 from .sla import Policy, ServiceLevel, SLAConfig
@@ -173,11 +178,14 @@ class LiveExecutor(ClusterExecutor):
             if spec.price_per_chip_hour is not None
             else engine.cfg.vm_price * spec.price_multiplier
         )
+        # offline per-pool fit: the same resolution build_pool uses
+        table = fit_spec_calibration(spec)
         super().__init__(
             cost_model=CostModel(
                 use_calibration=False,
                 decode_chunk_tokens=engine.cfg.decode_chunk_tokens,
                 speed_factor=spec.speed_factor,
+                calibration=table,
             ),
             price_per_chip_s=price,
         )
@@ -261,6 +269,15 @@ class LiveExecutor(ClusterExecutor):
                 )
                 with self._mu:  # workers finish stages concurrently
                     self.stages_completed += 1
+                if eng.calibrator is not None:
+                    # live calibration loop: feed the measured stage wall
+                    # and hot-swap the fitted correction at this stage
+                    # boundary — structure is calibration-invariant, so
+                    # the plan below stays index-compatible
+                    eng.calibrator.observe(
+                        self, q.work, q.stage_cursor - 1, 1, finish - start
+                    )
+                    eng.calibrator.maybe_apply(self)
                 if q.stage_cursor >= len(plan.stages):
                     eng._finish(q)
                     return
@@ -473,6 +490,15 @@ class LiveConfig:
     decode_tokens: int = 4
     #: decode chunk (= stage) size: the preemption/spill granularity
     decode_chunk_tokens: int = 2
+    #: live calibration loop (core/calibration.py): fit each pool's
+    #: cost model from its own measured stage walls and hot-swap the
+    #: correction at stage boundaries, closing quote→measurement drift
+    calibrate: bool = False
+    calibration_alpha: float = 0.25  # EWMA weight of the newest stage
+    calibration_min_samples: int = 8  # walls seen before the first swap
+    #: JSON persistence: fitted state is loaded from here at startup and
+    #: re-saved on every applied update (None keeps it in-memory)
+    calibration_path: Optional[str] = None
 
 
 class LiveEngine:
@@ -497,6 +523,17 @@ class LiveEngine:
                 cf_price_multiplier=cfg.cf_price_multiplier,
             )
         self.pools = [build_live_pool(spec, engine=self) for spec in specs]
+        self.calibrator = None
+        if cfg.calibrate:
+            from .calibration import LiveCalibrator
+
+            self.calibrator = LiveCalibrator(
+                alpha=cfg.calibration_alpha,
+                min_samples=cfg.calibration_min_samples,
+                path=cfg.calibration_path,
+            )
+            for pool in self.pools:  # apply persisted fits before work
+                self.calibrator.maybe_apply(pool)
         self.coordinator = QueryCoordinator(
             self.pools, policy=cfg.policy, cfg=cfg.sla
         )
@@ -607,3 +644,5 @@ class LiveEngine:
         for pool in self.pools:
             pool.stop()
         self._sched_thread.join(timeout=5.0)
+        if self.calibrator is not None and self.calibrator.path is not None:
+            self.calibrator.save(self.calibrator.path)

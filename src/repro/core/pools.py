@@ -66,11 +66,31 @@ class PoolSpec:
     autoscale: Optional[AutoscaleConfig] = None  # reserved pools only
     #: None follows SLAConfig.preempt_best_effort; a bool overrides it
     preempt_best_effort: Optional[bool] = None
+    #: directory of dry-run JSONs recorded on THIS pool's hardware;
+    #: build_pool fits the pool's speed_factor and per-(arch, kind)
+    #: corrections from it (core/calibration.py), replacing the declared
+    #: speed_factor constant with a measured one
+    dryrun_dir: Optional[str] = None
+    #: filter for a mixed dryrun_dir: only records whose "hw" field or
+    #: filename carry this tag belong to this pool's hardware
+    hw_tag: str = ""
 
     def price_chip_hour(self, hw: HwSpec = V5E) -> float:
         if self.price_per_chip_hour is not None:
             return self.price_per_chip_hour
         return hw.reserved_price * self.price_multiplier
+
+
+def fit_spec_calibration(spec: PoolSpec, *, hw: HwSpec = V5E):
+    """The one dryrun-fit resolution both backends share: a spec with
+    ``dryrun_dir`` fits a CalibrationTable from that pool's hardware
+    records (None otherwise), so simulated and live pools stay
+    bit-identical by construction."""
+    if not spec.dryrun_dir:
+        return None
+    from .calibration import fit_dryruns
+
+    return fit_dryruns(spec.dryrun_dir, hw=hw, hw_tag=spec.hw_tag)
 
 
 def build_pool(
@@ -82,16 +102,27 @@ def build_pool(
     fault: Optional[FaultModel] = None,
     rng: Optional[np.random.Generator] = None,
     sla: Optional[SLAConfig] = None,
+    calibration=None,
 ) -> ClusterExecutor:
     """Instantiate the executor a PoolSpec describes. All pools built for
     one simulation share `rng` so fault sampling stays deterministic for
-    a given seed regardless of how queries hop between pools."""
+    a given seed regardless of how queries hop between pools.
+
+    Calibration: an explicit `calibration` table wins; otherwise a spec
+    with `dryrun_dir` fits one from that pool's dry-run JSONs (offline
+    per-pool calibration — the fitted speed_factor replaces the declared
+    constant). An injected table applies regardless of
+    `use_calibration`, which only gates the process-wide default."""
     sla = sla or SLAConfig()
+    table = calibration
+    if table is None:
+        table = fit_spec_calibration(spec, hw=hw)
     cm = CostModel(
         hw=hw,
         use_calibration=use_calibration,
         decode_chunk_tokens=decode_chunk_tokens,
         speed_factor=spec.speed_factor,
+        calibration=table,
     )
     if spec.kind == "elastic":
         pool: ClusterExecutor = HighElasticCluster(

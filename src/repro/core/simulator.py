@@ -23,6 +23,7 @@ import numpy as np
 
 from .clusters import AutoscaleConfig, FaultModel
 from .engine import StageEvent
+from .insights import cluster_shares
 from .pools import PoolSpec, build_pool, default_pool_specs
 from .query import Query
 from .scheduler import QueryCoordinator, ServiceLayer
@@ -53,6 +54,11 @@ class SimConfig:
     #: the paper's vm/cf pair from the legacy knobs above — bit-for-bit
     #: the PR-1 two-cluster simulator.
     pools: Optional[list[PoolSpec]] = None
+    #: per-pool fitted CalibrationTables keyed by pool name, injected
+    #: into each pool's CostModel (core/calibration.py). Pools absent
+    #: from the dict fall back to PoolSpec.dryrun_dir (fitted at build
+    #: time) or the declared constants.
+    calibrations: Optional[dict] = None
 
 
 @dataclass
@@ -109,7 +115,8 @@ class SimResult:
     def summary(self) -> dict:
         by = self.by_sla()
         deadline = self.cfg.sla.relaxed_deadline_s
-        return {
+        cluster_share = cluster_shares(self.queries)
+        out = {
             "n": len(self.queries),
             "finished": sum(q.finish_time is not None for q in self.queries),
             "total_cost": round(self.total_cost(), 2),
@@ -117,8 +124,7 @@ class SimResult:
             "exec_by_sla": {
                 k: round(v, 1) for k, v in self.exec_time_by_sla().items()
             },
-            "vm_share": sum(q.cluster == "vm" for q in self.queries)
-            / max(1, len(self.queries)),
+            "cluster_share": cluster_share,
             "violations": len(self.pending_violations(deadline)),
             "max_rel_pending": max(
                 (q.pending_time or 0.0 for q in by["rel"]), default=0.0
@@ -134,6 +140,9 @@ class SimResult:
             "spill_backs": sum(q.spill_backs for q in self.queries),
             "retries": sum(q.retries for q in self.queries),
         }
+        if "vm" in cluster_share:  # legacy key, derived, only when real
+            out["vm_share"] = cluster_share["vm"]
+        return out
 
 
 class Simulation:
@@ -161,6 +170,7 @@ class Simulation:
                 fault=cfg.fault,
                 rng=rng,
                 sla=cfg.sla,
+                calibration=(cfg.calibrations or {}).get(spec.name),
             )
             for spec in specs
         ]

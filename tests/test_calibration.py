@@ -1,0 +1,506 @@
+"""Per-pool calibration (core/calibration.py): decode-context pricing,
+offline dry-run fits, cache invalidation, and the live EWMA loop."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    CalibrationTable,
+    CostExplorer,
+    CostModel,
+    LiveCalibrator,
+    PoolSpec,
+    Query,
+    QueryWork,
+    ServiceLevel,
+    SimConfig,
+    Simulation,
+    build_pool,
+    fit_dryruns,
+    price_menu,
+)
+from repro.core.calibration import invalidate_default_calibration
+from repro.core.cost_model import _analytic_step
+
+FIXTURES = Path(__file__).parent / "fixtures" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: decode chunks are priced at their own (grown) context
+# ---------------------------------------------------------------------------
+
+def test_decode_chunk_times_monotone_in_context():
+    """Later chunks read a longer KV cache, so equal-size chunk times are
+    non-decreasing in context (the old model priced every chunk at the
+    initial context — all equal)."""
+    cm = CostModel(use_calibration=False, decode_chunk_tokens=32)
+    w = QueryWork(arch="paper-default", prompt_tokens=4096, output_tokens=512)
+    times = [s.time_s for s in cm.plan(w, 8).stages[1:]]  # 16 full chunks
+    assert len(times) == 16
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    assert times[-1] > times[0]  # strictly grows across the generation
+
+
+def test_long_generation_quotes_more_than_split_generations():
+    """Acceptance: one 512-token generation decodes into contexts the 16
+    independent 32-token generations never reach, so it quotes strictly
+    more decode chip-seconds at the same prompt."""
+    cm = CostModel(use_calibration=False, decode_chunk_tokens=32)
+    long_w = QueryWork(arch="paper-default", prompt_tokens=8192,
+                       output_tokens=512)
+    short_w = QueryWork(arch="paper-default", prompt_tokens=8192,
+                        output_tokens=32)
+    decode_cs = lambda w: sum(  # noqa: E731
+        s.chip_seconds for s in cm.plan(w, 8).stages[1:]
+    )
+    assert decode_cs(long_w) > 16 * decode_cs(short_w)
+
+
+def test_decode_chunking_still_preserves_totals_and_structure():
+    """Context growth is token-exact: chunk boundaries are a scheduling
+    choice, never a cost — and structure stays chips/speed-independent,
+    so mid-plan cursors survive pool hops."""
+    w = QueryWork(arch="paper-default", prompt_tokens=4096, output_tokens=100)
+    chunked = CostModel(use_calibration=False, decode_chunk_tokens=32)
+    whole = CostModel(use_calibration=False, decode_chunk_tokens=0)
+    assert chunked.exec_time(w, 8) == pytest.approx(whole.exec_time(w, 8))
+    assert chunked.chip_seconds(w, 8) == pytest.approx(whole.chip_seconds(w, 8))
+    fast = chunked.plan(w, 8)
+    slow = CostModel(use_calibration=False, decode_chunk_tokens=32,
+                     speed_factor=0.25).plan(w, 64)
+    assert [s.name for s in fast.stages] == [s.name for s in slow.stages]
+
+
+# ---------------------------------------------------------------------------
+# offline fit: dry-run JSONs -> speed_factor + per-(arch, kind) factors
+# ---------------------------------------------------------------------------
+
+def _write_dryrun(dir_, arch, kind, step_s, *, chips=256, hw_tag=None,
+                  tokens=None, name=None):
+    tokens = tokens or {"serve": 32 * 32768, "train": 256 * 4096}[kind]
+    rec = {
+        "arch": arch, "kind": kind, "shape": "synthetic", "chips": chips,
+        "tokens": tokens, "status": "ok",
+        "roofline": {"terms": {"step_s": step_s}},
+    }
+    if hw_tag:
+        rec["hw"] = hw_tag
+    path = Path(dir_) / (name or f"{arch}__{kind}__{hw_tag or 'x'}.json")
+    path.write_text(json.dumps(rec))
+
+
+def _analytic(arch, kind, chips=256):
+    tokens = {"serve": 32 * 32768, "train": 256 * 4096}[kind]
+    return _analytic_step(get_config(arch), tokens, kind, chips=chips)
+
+
+def test_offline_fit_recovers_known_speed_ratio(tmp_path):
+    """Round trip: dry-runs synthesized at a known speed ratio fit back
+    to that speed_factor, with every residual factor at 1.0."""
+    speed_true = 0.25
+    for arch in ("paper-default", "qwen2-0.5b"):
+        for kind in ("serve", "train"):
+            _write_dryrun(tmp_path, arch, kind,
+                          _analytic(arch, kind) / speed_true)
+    table = fit_dryruns(tmp_path)
+    assert table.speed_factor == pytest.approx(speed_true, rel=1e-6)
+    for arch in ("paper-default", "qwen2-0.5b"):
+        for kind in ("serve", "train"):
+            assert table.factor(arch, kind) == pytest.approx(1.0, rel=1e-6)
+
+
+def test_offline_fit_separates_speed_from_arch_kind_residuals(tmp_path):
+    """A wobble one pool speed cannot absorb lands in the per-(arch,
+    kind) factors, and the fitted model reproduces every measurement."""
+    speed_true, wobble = 0.5, {("paper-default", "serve"): 1.2,
+                               ("paper-default", "train"): 1.0 / 1.2}
+    for (arch, kind), f in wobble.items():
+        _write_dryrun(tmp_path, arch, kind,
+                      _analytic(arch, kind) * f / speed_true)
+    table = fit_dryruns(tmp_path)
+    # geomean of the wobbles is 1, so the speed comes out exact
+    assert table.speed_factor == pytest.approx(speed_true, rel=1e-6)
+    for (arch, kind), f in wobble.items():
+        measured = _analytic(arch, kind) * f / speed_true
+        fitted = (_analytic(arch, kind) * table.factor(arch, kind)
+                  / table.speed_factor)
+        assert fitted == pytest.approx(measured, rel=1e-6)
+
+
+def test_offline_fit_filters_by_hw_tag(tmp_path):
+    """A mixed directory: only the records carrying the pool's hw tag
+    contribute to its fit."""
+    _write_dryrun(tmp_path, "paper-default", "serve",
+                  _analytic("paper-default", "serve") / 0.25, hw_tag="spot")
+    _write_dryrun(tmp_path, "paper-default", "serve",
+                  _analytic("paper-default", "serve") / 1.0, hw_tag="v5e")
+    spot = fit_dryruns(tmp_path, hw_tag="spot")
+    v5e = fit_dryruns(tmp_path, hw_tag="v5e")
+    assert spot.speed_factor == pytest.approx(0.25, rel=1e-6)
+    assert v5e.speed_factor == pytest.approx(1.0, rel=1e-6)
+
+
+def test_offline_fit_raises_on_empty_dir(tmp_path):
+    with pytest.raises(ValueError, match="no usable dry-run records"):
+        fit_dryruns(tmp_path)
+    with pytest.raises(ValueError, match="hw_tag"):
+        _write_dryrun(tmp_path, "paper-default", "serve", 1.0, hw_tag="a")
+        fit_dryruns(tmp_path, hw_tag="does-not-exist")
+
+
+def test_checked_in_fixtures_fit():
+    """The CI calibration-smoke fixtures: a 0.5x pool with small
+    per-(arch, kind) wobbles, recorded in dryrun.py's canonical shapes
+    (kind and tokens derived from the shape name)."""
+    table = fit_dryruns(FIXTURES)
+    assert table.speed_factor == pytest.approx(0.5, rel=0.05)
+    assert table.factor("paper-default", "serve") > table.factor(
+        "paper-default", "train"
+    )
+    assert len(table.as_dict()["factors"]) == 4
+
+
+def test_pool_spec_dryrun_dir_fits_the_pool(tmp_path):
+    """PoolSpec.dryrun_dir replaces the declared speed_factor constant
+    with a fitted one: the pool plans (and quotes) at measured speed."""
+    for kind in ("serve", "train"):
+        _write_dryrun(tmp_path, "paper-default", kind,
+                      _analytic("paper-default", kind) / 0.5)
+    spec = PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                    slice_chips=16, speed_factor=1.0,
+                    dryrun_dir=str(tmp_path))
+    pool = build_pool(spec, use_calibration=False)
+    assert pool.cost_model.effective_speed_factor == pytest.approx(0.5)
+    declared = build_pool(
+        PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                 slice_chips=16, speed_factor=1.0),
+        use_calibration=False,
+    )
+    w = QueryWork(arch="paper-default", prompt_tokens=200_000, output_tokens=8)
+    assert pool.cost_model.exec_time(w, 16) == pytest.approx(
+        2 * declared.cost_model.exec_time(w, 16)
+    )
+
+
+def test_sim_calibrations_flow_into_quotes_and_billing():
+    """SimConfig.calibrations injects fitted tables into the registry:
+    quotes, placement, and billing all run on the corrected model."""
+    table = CalibrationTable(speed_factor=0.5, source="test")
+    pools = [PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                      slice_chips=16)]
+    cal = Simulation(SimConfig(use_calibration=False, pools=pools,
+                               calibrations={"vm": table}))
+    base = Simulation(SimConfig(use_calibration=False, pools=pools))
+    q = Query(work=QueryWork(arch="paper-default", prompt_tokens=200_000,
+                             output_tokens=8),
+              sla=ServiceLevel.IMMEDIATE, submit_time=0.0)
+    assert cal.vm.quote(q, 0.0)["latency_s"] == pytest.approx(
+        2 * base.vm.quote(q, 0.0)["latency_s"]
+    )
+    res = cal.run([q])
+    done = res.queries[0]
+    # billed on the corrected model: 2x the chip-seconds of the declared
+    assert done.chip_seconds == pytest.approx(
+        cal.vm.cost_model.plan(done.work, 16).chip_seconds
+    )
+    assert done.chip_seconds == pytest.approx(
+        2 * base.vm.cost_model.plan(done.work, 16).chip_seconds
+    )
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: calibration updates invalidate the plan caches
+# ---------------------------------------------------------------------------
+
+def test_calibration_update_between_two_plans_takes_effect():
+    """Regression: the old module-level lru_cache + CostModel._plan_cache
+    never invalidated, so an update after first use silently no-opped."""
+    table = CalibrationTable()
+    cm = CostModel(use_calibration=False, calibration=table)
+    w = QueryWork(arch="paper-default", prompt_tokens=100_000, output_tokens=16)
+    before = cm.plan(w, 16)
+    t0 = before.exec_time
+    table.set_speed_factor(0.5)  # the pool is actually 2x slower
+    after = cm.plan(w, 16)
+    assert after.exec_time == pytest.approx(2 * t0)
+    table.set_factor("paper-default", "serve", 2.0)
+    assert cm.plan(w, 16).exec_time == pytest.approx(4 * t0)
+    # structure never moves — only times (the cursor-validity invariant)
+    assert [s.name for s in before.stages] == [
+        s.name for s in cm.plan(w, 16).stages
+    ]
+
+
+def test_default_table_is_invalidatable(tmp_path, monkeypatch):
+    """The results/dryrun-backed default table re-reads records after
+    invalidate_default_calibration() — the lru_cache never could."""
+    import repro.core.cost_model as cost_model_mod
+
+    monkeypatch.setattr(cost_model_mod, "RESULTS", tmp_path)
+    try:
+        invalidate_default_calibration()  # drop factors cached pre-patch
+        arch, kind = "paper-default", "serve"
+        an = _analytic(arch, kind)
+        rec = {"chips": 256, "roofline": {"terms": {"step_s": an * 2.0}}}
+        path = tmp_path / f"{arch}__prefill_32k__16x16.json"
+        path.write_text(json.dumps(rec))
+        cm = CostModel(use_calibration=True)
+        w = QueryWork(arch=arch, prompt_tokens=100_000, output_tokens=0)
+        t_before = cm.exec_time(w, 16)
+        path.write_text(json.dumps(
+            {"chips": 256, "roofline": {"terms": {"step_s": an * 4.0}}}
+        ))
+        assert cm.exec_time(w, 16) == pytest.approx(t_before)  # cached
+        invalidate_default_calibration()
+        assert cm.exec_time(w, 16) == pytest.approx(2 * t_before)
+    finally:
+        invalidate_default_calibration()  # leave no fixture factors behind
+
+
+def test_set_calibration_invalidates_plan_cache():
+    cm = CostModel(use_calibration=False)
+    w = QueryWork(arch="paper-default", prompt_tokens=100_000, output_tokens=16)
+    t0 = cm.exec_time(w, 16)
+    cm.set_calibration(CalibrationTable(speed_factor=0.25))
+    assert cm.exec_time(w, 16) == pytest.approx(4 * t0)
+    cm.set_calibration(None)
+    assert cm.exec_time(w, 16) == pytest.approx(t0)
+
+
+def test_table_persistence_round_trip(tmp_path):
+    table = CalibrationTable(
+        factors={("paper-default", "serve"): 1.25}, speed_factor=0.5,
+        source="unit",
+    )
+    p = tmp_path / "table.json"
+    table.save(p)
+    back = CalibrationTable.load(p)
+    assert back.speed_factor == pytest.approx(0.5)
+    assert back.factor("paper-default", "serve") == pytest.approx(1.25)
+    assert back.factor("paper-default", "train") == 1.0  # no loader: 1.0
+    assert back.source == "unit"
+
+
+# ---------------------------------------------------------------------------
+# the live EWMA loop (threadless unit level; threaded in test_live.py)
+# ---------------------------------------------------------------------------
+
+def _mis_declared_pool(declared=2.0):
+    return build_pool(
+        PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                 slice_chips=16, speed_factor=declared),
+        use_calibration=False,
+    )
+
+
+def test_live_calibrator_converges_on_mis_declared_speed():
+    """A pool declared 2x fast actually running at 1x: the EWMA over
+    measured/predicted stage ratios fits the speed back to 1x and the
+    hot swap makes subsequent quotes match the measured walls."""
+    pool = _mis_declared_pool(declared=2.0)
+    truth = CostModel(use_calibration=False, speed_factor=1.0)
+    w = QueryWork(arch="paper-default", prompt_tokens=200_000,
+                  output_tokens=64)
+    cal = LiveCalibrator(alpha=0.5, min_samples=3)
+    walls = truth.plan(w, 16)  # 3 stages: prefill + two 32-tok chunks
+    for i, s in enumerate(walls.stages):
+        cal.observe(pool, w, i, 16, s.time_s)
+    assert cal.ratio("vm") == pytest.approx(2.0)
+    drift_before = abs(pool.cost_model.plan(w, 16).exec_time
+                       - walls.exec_time) / walls.exec_time
+    assert cal.maybe_apply(pool)
+    drift_after = abs(pool.cost_model.plan(w, 16).exec_time
+                      - walls.exec_time) / walls.exec_time
+    assert drift_after < drift_before / 10
+    assert pool.cost_model.effective_speed_factor == pytest.approx(1.0)
+    # idempotent below the epsilon: no churn re-planning every stage
+    assert not cal.maybe_apply(pool)
+
+
+def test_live_calibrator_needs_min_samples():
+    pool = _mis_declared_pool()
+    cal = LiveCalibrator(alpha=0.5, min_samples=10)
+    w = QueryWork(arch="paper-default", prompt_tokens=100_000, output_tokens=8)
+    wall = CostModel(use_calibration=False).plan(w, 16).stages[0].time_s
+    for _ in range(3):
+        cal.observe(pool, w, 0, 16, wall)
+    assert not cal.maybe_apply(pool)
+    assert pool.cost_model.calibration is None
+
+
+def test_live_calibrator_persists_and_resumes(tmp_path):
+    path = tmp_path / "live_cal.json"
+    pool = _mis_declared_pool(declared=2.0)
+    cal = LiveCalibrator(alpha=0.5, min_samples=2, path=path)
+    truth = CostModel(use_calibration=False, speed_factor=1.0)
+    w = QueryWork(arch="paper-default", prompt_tokens=100_000, output_tokens=8)
+    for i, s in enumerate(truth.plan(w, 16).stages):
+        cal.observe(pool, w, i, 16, s.time_s)
+    assert cal.maybe_apply(pool)  # apply also persists
+    assert path.exists()
+    resumed = LiveCalibrator(alpha=0.5, min_samples=2, path=path)
+    assert resumed.ratio("vm") == pytest.approx(cal.ratio("vm"))
+    pool2 = _mis_declared_pool(declared=2.0)
+    assert resumed.maybe_apply(pool2)  # loaded samples count
+    assert pool2.cost_model.effective_speed_factor == pytest.approx(
+        pool.cost_model.effective_speed_factor
+    )
+
+
+def test_live_loop_preserves_offline_factors_through_hot_swap():
+    """A pool with an offline dry-run fit keeps its per-(arch, kind)
+    factors when the live loop refines the speed: the EWMA is measured
+    against a reference that already includes those factors, so the two
+    fits compose instead of the swap discarding the offline one."""
+    offline = CalibrationTable(
+        factors={("paper-default", "serve"): 1.5}, speed_factor=1.0,
+        source="dryrun:test",
+    )
+    pool = build_pool(
+        PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                 slice_chips=16, speed_factor=1.0),
+        use_calibration=False, calibration=offline,
+    )
+    cal = LiveCalibrator(alpha=0.5, min_samples=1)
+    w = QueryWork(arch="paper-default", prompt_tokens=200_000,
+                  output_tokens=0)
+    # measured walls: the offline factor is REAL but the pool is 2x
+    # slower than even the offline fit believed
+    wall = 2.0 * pool.cost_model.plan(w, 16).stages[0].time_s
+    cal.observe(pool, w, 0, 16, wall)
+    assert cal.maybe_apply(pool)
+    swapped = pool.cost_model.calibration
+    assert swapped is not offline  # the live table took over...
+    assert swapped.factor("paper-default", "serve") == pytest.approx(1.5)
+    assert swapped.speed_factor == pytest.approx(0.5)  # declared 1.0 / 2
+    assert pool.cost_model.plan(w, 16).stages[0].time_s == pytest.approx(
+        wall
+    )
+
+
+def test_live_loop_resets_when_declared_speed_changes():
+    """Persisted EWMA state measured against an old declared speed must
+    not be applied to a re-declared pool: apply refuses until fresh
+    walls rebuild the state against the new reference."""
+    old = _mis_declared_pool(declared=2.0)
+    cal = LiveCalibrator(alpha=0.5, min_samples=2)
+    w = QueryWork(arch="paper-default", prompt_tokens=100_000,
+                  output_tokens=8)
+    truth = CostModel(use_calibration=False, speed_factor=1.0)
+    for i, s in enumerate(truth.plan(w, 16).stages):
+        cal.observe(old, w, i, 16, s.time_s)
+    assert cal.samples("vm") >= 2
+    fixed = _mis_declared_pool(declared=1.0)  # operator corrected it
+    assert not cal.maybe_apply(fixed)  # stale reference: refuse
+    assert fixed.cost_model.calibration is None
+    # fresh walls restart the EWMA against the new declared speed
+    cal.observe(fixed, w, 0, 16, truth.plan(w, 16).stages[0].time_s)
+    assert cal.samples("vm") == 1
+
+
+def test_price_menu_rejects_ambiguous_calibration():
+    """calibration corrects only the legacy knob pair — combining it
+    with pools or an explicit cost_model must raise, never silently
+    quote uncorrected prices."""
+    w = QueryWork(arch="paper-default", prompt_tokens=100_000,
+                  output_tokens=8)
+    table = CalibrationTable(speed_factor=0.5)
+    with pytest.raises(ValueError, match="silently-ignored"):
+        price_menu(w, cost_model=CostModel(use_calibration=False),
+                   calibration=table)
+    pool = build_pool(PoolSpec(name="vm", kind="reserved", chips=4),
+                      use_calibration=False)
+    with pytest.raises(ValueError, match="silently-ignored"):
+        price_menu(w, pools=[pool], calibration=table)
+
+
+def test_summary_cluster_share_on_n_pool_registry():
+    from repro.core import generate
+
+    pools = [PoolSpec(name="v5e", kind="reserved", chips=64, mode="sos",
+                      slice_chips=16)]
+    res = Simulation(SimConfig(use_calibration=False, pools=pools)).run(
+        generate(horizon_s=1800, seed=3)
+    )
+    s = res.summary()
+    assert set(s["cluster_share"]) == {"v5e"}
+    assert "vm_share" not in s  # no pool named vm: no fake legacy key
+
+
+def test_stage_observer_feeds_the_loop_from_a_simulated_pool():
+    """engine.ClusterExecutor.stage_observer closes the loop in-sim: the
+    calibrator reads every completed stage's wall without touching the
+    accounting path."""
+    pool = _mis_declared_pool(declared=2.0)
+    cal = LiveCalibrator(alpha=0.5, min_samples=4)
+    pool.stage_observer = lambda q, stage, ev: cal.observe(
+        pool, q.work, ev.index, ev.chips, ev.finish - ev.start
+    )
+    q = Query(work=QueryWork(arch="paper-default", prompt_tokens=200_000,
+                             output_tokens=64),
+              sla=ServiceLevel.IMMEDIATE, submit_time=0.0)
+    q.dequeue_time = 0.0
+    pool.submit(q, 0.0)
+    pool.advance_to(1e9)
+    assert q.state == "done"
+    # the sim executes exactly the declared model, so the loop reads
+    # ratio 1.0 — predicted == measured closes with zero drift
+    assert cal.samples("vm") == len(q.stage_trace)
+    assert cal.ratio("vm") == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: CostExplorer.aggregate on an N-pool registry
+# ---------------------------------------------------------------------------
+
+def test_cost_explorer_reports_per_pool_cluster_share():
+    qs = []
+    for i, name in enumerate(["v5e", "v5e", "spot", "cf"]):
+        q = Query(work=QueryWork(), sla=ServiceLevel.IMMEDIATE,
+                  submit_time=0.0)
+        q.cluster = name
+        q.dequeue_time = q.start_time = 0.0
+        q.finish_time = 1.0
+        q.cost = q.chip_seconds = 1.0
+        qs.append(q)
+    agg = CostExplorer(qs).aggregate()
+    assert agg["cluster_share"] == {"v5e": 0.5, "spot": 0.25, "cf": 0.25}
+    assert "vm_share" not in agg  # no pool named vm: no fake legacy key
+
+
+def test_cost_explorer_keeps_derived_vm_share_for_legacy_pair():
+    from repro.core import generate, run_sim
+
+    res = run_sim(generate(horizon_s=1800, seed=2), use_calibration=False)
+    agg = CostExplorer(res.queries).aggregate()
+    assert set(agg["cluster_share"]) <= {"vm", "cf"}
+    assert agg["vm_share"] == agg["cluster_share"]["vm"]
+    assert sum(agg["cluster_share"].values()) == pytest.approx(1.0, abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# calibrated quotes flow into the price menu
+# ---------------------------------------------------------------------------
+
+def test_price_menu_reflects_pool_calibration(tmp_path):
+    for kind in ("serve", "train"):
+        _write_dryrun(tmp_path, "paper-default", kind,
+                      _analytic("paper-default", kind) / 0.5)
+    spec_cal = PoolSpec(name="vm", kind="reserved", chips=4,
+                        dryrun_dir=str(tmp_path))
+    spec_raw = PoolSpec(name="vm", kind="reserved", chips=4)
+    w = QueryWork(arch="paper-default", prompt_tokens=200_000,
+                  output_tokens=16)
+    menu_cal = {m.sla: m for m in price_menu(
+        w, pools=[build_pool(spec_cal, use_calibration=False)])}
+    menu_raw = {m.sla: m for m in price_menu(
+        w, pools=[build_pool(spec_raw, use_calibration=False)])}
+    # the fitted 0.5x pool takes 2x the time and bills 2x chip-seconds
+    assert menu_cal["relaxed"].est_exec_s == pytest.approx(
+        2 * menu_raw["relaxed"].est_exec_s, rel=1e-6
+    )
+    assert menu_cal["relaxed"].est_cost == pytest.approx(
+        2 * menu_raw["relaxed"].est_cost, rel=1e-4
+    )

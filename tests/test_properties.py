@@ -172,16 +172,30 @@ def _random_stream(seed: int, n: int) -> list[Query]:
     ]
 
 
-def _run_heap_checked(seed: int, n: int, spill_back: bool):
+def _run_heap_checked(seed: int, n: int, spill_back: bool,
+                      hot_swap: bool = False):
     """A contended SOS sim with preemption + spill (+ spill-back) + stage
     faults, re-checking the heap discipline after EVERY executor advance:
     every running stage has exactly one valid heap entry, and no valid
-    entry refers to a retired run."""
+    entry refers to a retired run. With ``hot_swap``, a calibration
+    table is swapped into EVERY pool's cost model MID-RUN (each pool
+    after its own 10th advance) — the invariants must survive the live
+    model update."""
+    from repro.core.calibration import CalibrationTable
+
     orig = ClusterExecutor.advance_to
+    advances: dict[int, int] = {}
 
     def checked(self, now):
         out = orig(self, now)
         self.check_heap_invariant()
+        advances[id(self)] = advances.get(id(self), 0) + 1
+        if hot_swap and advances[id(self)] == 10:
+            # mid-run hot swap: later stages of RUNNING queries re-plan
+            # 2x slower; structure is invariant so cursors stay valid
+            self.cost_model.set_calibration(
+                CalibrationTable(speed_factor=0.5)
+            )
         return out
 
     ClusterExecutor.advance_to = checked
@@ -206,11 +220,15 @@ def _run_heap_checked(seed: int, n: int, spill_back: bool):
     seed=st.integers(0, 10_000),
     n=st.integers(5, 25),
     spill_back=st.booleans(),
+    hot_swap=st.booleans(),
 )
-def test_heap_discipline_any_preempt_spill_retry_sequence(seed, n, spill_back):
+def test_heap_discipline_any_preempt_spill_retry_sequence(
+    seed, n, spill_back, hot_swap
+):
     """The engine's core data-structure invariant survives ANY sequence
-    of preemptions, cross-pool spills, spill-backs, and stage retries."""
-    res = _run_heap_checked(seed, n, spill_back)
+    of preemptions, cross-pool spills, spill-backs, and stage retries —
+    including a mid-run calibration hot swap."""
+    res = _run_heap_checked(seed, n, spill_back, hot_swap)
     assert len(res.queries) == n
     for q in res.queries:
         assert q.finish_time is not None and q.state == "done"
@@ -224,13 +242,15 @@ def test_heap_discipline_any_preempt_spill_retry_sequence(seed, n, spill_back):
     seed=st.integers(0, 10_000),
     n=st.integers(5, 25),
     spill_back=st.booleans(),
+    hot_swap=st.booleans(),
 )
-def test_billed_chip_seconds_are_conserved(seed, n, spill_back):
+def test_billed_chip_seconds_are_conserved(seed, n, spill_back, hot_swap):
     """Billing conservation: each query's billed chip-seconds equal the
     sum of its per-stage trace records — bit for bit through preemption,
-    pool hops, and retry re-billing — and its cost is the per-stage cost
-    at each executing pool's own price."""
-    res = _run_heap_checked(seed, n, spill_back)
+    pool hops, retry re-billing, and a mid-run calibration hot swap —
+    and its cost is the per-stage cost at each executing pool's own
+    price."""
+    res = _run_heap_checked(seed, n, spill_back, hot_swap)
     for q in res.queries:
         assert q.chip_seconds == pytest.approx(
             sum(e.chip_seconds for e in q.stage_trace)
