@@ -1,7 +1,6 @@
-"""Scale benchmark: a 50k-query day through the stage-level engine.
+"""Scale benchmark: 50k- and 1M-query days through the stage engine.
 
-Drives the Table-1 workload scaled to ~50k queries over a 24h horizon in
-SOS mode, across three systems:
+Drives the Table-1 workload scaled over a 24h horizon in SOS mode:
 
   engine_off / engine_on — the PR-1 pair: stage-boundary preemption +
       cross-cluster spill OFF vs ON on the two-pool (vm/cf) registry.
@@ -11,18 +10,39 @@ SOS mode, across three systems:
       rows come from the same run of this script, so the dominance claim
       (lower cost at equal-or-better IMMEDIATE p95 wait) is read off one
       printout.
+  pools3_fuse_within / pools3_fuse_cross — the same 3-pool day with
+      multi-query fusion on: pending-queue fusion alone vs + cross-pool
+      placement-time fusion (docs/fusion.md). Run for seeds 0-2; the
+      dominance predicate (cross strictly cheaper at equal-or-better
+      IMMEDIATE p95) must hold on every seed.
+  pools3_1m — a 1M-query day (~20x) on the 3-pool registry with
+      cross-pool fusion, exercising the O(1) hot paths (incremental
+      backlog counter, indexed fusion, static-quote caches) at the
+      scale the paper's economics actually target.
 
 Reported per row:
-  * imm_p95_wait_s — IMMEDIATE queries' p95 slice wait
-  * violations     — relaxed pending-deadline violations
-  * total_cost     — billed chip-seconds at each pool's own price
-  * provisioned_cs — reserved capacity paid for (autoscale footprint)
+  * wall_s / qps    — wall seconds and simulated queries per wall-second
+  * imm_p95_wait_s  — IMMEDIATE queries' p95 slice wait
+  * violations      — relaxed pending-deadline violations
+  * total_cost      — billed chip-seconds at each pool's own price
+  * provisioned_cs  — reserved capacity paid for (autoscale footprint)
+  * fusion_rate     — fraction of queries that executed in a fused batch
 
-Usage: python benchmarks/scale.py [--factor 55] [--fast]
+Results are written to BENCH_scale.json (--out). ``speedup_vs_pre_pr``
+compares the classic rows' qps against the LOAD-CONTROLLED interleaved
+pre-overhaul baseline (PRE_PR_INTERLEAVED — the fair 50k comparison,
+~1.6-1.7x); the loaded-session baseline (PRE_PR_WALL_S) is reported as
+context only. The structural win is asymptotic — PRE_PR_SCALING: the
+old engine's per-event scans stop finishing at all past ~100k
+queries/day, the scales this PR targets.
+
+Usage: python benchmarks/scale.py [--factor 55] [--fast] [--skip-1m]
+                                  [--out BENCH_scale.json] [--budget-s N]
 """
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import sys
 import time
@@ -44,6 +64,44 @@ from repro.core.workload import generate, scaled_patterns  # noqa: E402
 
 DAY_S = 86_400.0
 SEED_DAY_QUERIES = 911  # Table 1 total
+
+#: wall seconds of the four classic rows at --factor 55 (50105 queries)
+#: measured at the pre-overhaul commit (PR 4 head) on this machine —
+#: the first measurement of the working session (shared host, loaded).
+PRE_PR_WALL_S = {
+    "engine_off": 10.19,
+    "engine_on": 13.54,
+    "pools3_runqueue": 17.48,
+    "pools3_backlog": 15.15,
+}
+#: the same pre-overhaul rows re-measured strictly INTERLEAVED with the
+#: post-overhaul tree (one old run, one new run, alternating; best of 4
+#: reps per row), so both sides saw the same host load. This is the
+#: fairest 50k-scale comparison: ~1.6-1.7x per row — at 50k the old
+#: code's queues are still shallow, so the O(n) scans it does per event
+#: only cost ~40% of its runtime. The structural win is asymptotic:
+#: scan depth grows with scale (PRE_PR_SCALING), and past ~100k queries
+#: a day the old engine stops finishing at all.
+PRE_PR_INTERLEAVED = {
+    "pre_pr_wall_s": {"engine_off": 5.49, "engine_on": 6.14,
+                      "pools3_runqueue": 6.92, "pools3_backlog": 8.35},
+    "post_wall_s": {"engine_off": 3.40, "engine_on": 3.54,
+                    "pools3_runqueue": 4.28, "pools3_backlog": 4.93},
+    "speedup": {"engine_off": 1.61, "engine_on": 1.73,
+                "pools3_runqueue": 1.62, "pools3_backlog": 1.69},
+}
+PRE_PR_QUERIES = 50105
+#: the pre-overhaul code's per-event work grows with queue depth
+#: (O(running+waiting) backlog scans per quote, O(n) fused pops), so
+#: its wall time diverges superlinearly with scale: at a 200k-query day
+#: (factor 220) the pre-overhaul `pools3_backlog` row was killed after
+#: 45 minutes WITHOUT completing, where the overhauled engine finishes
+#: the same day in ~12-24s — and a 1M-query day (`pools3_1m`) in
+#: about a minute, which the old code cannot approach at all.
+PRE_PR_SCALING = {
+    "pools3_backlog_200k": {"pre_pr_wall_s": ">2700 (killed, unfinished)",
+                            "post_overhaul_wall_s": "~12-24"},
+}
 
 
 def _report(sim: Simulation, res, wall: float, n: int) -> dict:
@@ -84,6 +142,7 @@ def _report(sim: Simulation, res, wall: float, n: int) -> dict:
     return {
         "queries": n,
         "wall_s": round(wall, 2),
+        "qps": int(n / max(wall, 1e-9)),  # simulated queries per wall-sec
         "stages": stages,
         "stages_per_s": int(stages / max(wall, 1e-9)),
         "total_cost": s["total_cost"],
@@ -97,18 +156,41 @@ def _report(sim: Simulation, res, wall: float, n: int) -> dict:
         "preemptions": s["preemptions"],
         "spilled": s["spilled"],
         "spill_backs": s["spill_backs"],
+        "fused_queries": s["fused_queries"],
+        "fusion_rate": round(s["fused_queries"] / max(n, 1), 3),
         "provisioned_cs": int(provisioned),
         "vm_share": round(s.get("vm_share", 0.0), 3),
         "finished": s["finished"],
     }
 
 
-def run_day(n_target: int, engine_on: bool, seed: int = 0) -> dict:
-    """PR-1 baseline: the two-pool vm/cf system, stage policies on/off."""
+def _timed_run(sim: Simulation, qs):
+    """Run one simulated day under the wall clock, with the cyclic GC
+    paused: the run allocates millions of acyclic objects (queries,
+    stage events, heap entries) and generational collections would
+    otherwise rescan them constantly."""
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        res = sim.run(qs)
+        wall = time.perf_counter() - t0
+    finally:
+        gc.enable()
+    return res, wall
+
+
+def run_day(n_target: int, engine_on: bool, seed: int = 0,
+            repeats: int = 1) -> dict:
+    """PR-1 baseline: the two-pool vm/cf system, stage policies on/off.
+    `repeats` re-runs the (deterministic) day and keeps the best wall —
+    per-query results are identical across repeats, so only the timing
+    noise of a shared machine is filtered out."""
     factor = n_target / SEED_DAY_QUERIES
-    qs = generate(
-        horizon_s=DAY_S, seed=seed, patterns=scaled_patterns(factor)
-    )
+    def qs_factory():
+        return generate(
+            horizon_s=DAY_S, seed=seed, patterns=scaled_patterns(factor)
+        )
     cfg = SimConfig(
         policy=Policy.AUTO,
         vm_mode="sos",
@@ -122,11 +204,23 @@ def run_day(n_target: int, engine_on: bool, seed: int = 0) -> dict:
             spill_enabled=engine_on,
         ),
     )
-    sim = Simulation(cfg)
-    t0 = time.perf_counter()
-    res = sim.run(qs)
-    wall = time.perf_counter() - t0
-    return _report(sim, res, wall, len(qs))
+    sim, res, wall, n = _best_of(cfg, qs_factory, repeats)
+    return _report(sim, res, wall, n)
+
+
+def _best_of(cfg: SimConfig, qs_factory, repeats: int):
+    """Run the (deterministic) day `repeats` times on freshly generated
+    queries — Query objects are mutated by a run — keeping the best
+    wall. Per-query results are identical across repeats, so this only
+    filters shared-machine timing noise out of the comparison."""
+    best = None
+    for _ in range(max(1, repeats)):
+        qs = qs_factory()
+        sim = Simulation(cfg)
+        res, wall = _timed_run(sim, qs)
+        if best is None or wall < best[2]:
+            best = (sim, res, wall, len(qs))
+    return best
 
 
 def _pools3_specs(autoscale: AutoscaleConfig) -> list[PoolSpec]:
@@ -144,17 +238,8 @@ def _pools3_specs(autoscale: AutoscaleConfig) -> list[PoolSpec]:
     ]
 
 
-def run_day_pools3(n_target: int, backlog_policy: bool, seed: int = 0) -> dict:
-    """The 3-pool registry. backlog_policy=False reproduces PR-1's
-    policies on it (run-queue autoscale trigger, one-way spill);
-    backlog_policy=True turns on backlog-driven autoscale + spill-back.
-    Everything else — pools, bounds, provisioning delays — is identical,
-    so the two rows isolate the policy difference."""
-    factor = n_target / SEED_DAY_QUERIES
-    qs = generate(
-        horizon_s=DAY_S, seed=seed, patterns=scaled_patterns(factor)
-    )
-    autoscale = AutoscaleConfig(
+def _pools3_autoscale(backlog_policy: bool) -> AutoscaleConfig:
+    return AutoscaleConfig(
         enabled=True,
         min_chips=32,  # small base reservation: bursts NEED the scaler
         max_chips=48,
@@ -167,10 +252,33 @@ def run_day_pools3(n_target: int, backlog_policy: bool, seed: int = 0) -> dict:
         backlog_high_s=8.0,  # backlog policy: react to predicted drain
         backlog_low_s=2.0,
     )
+
+
+def run_day_pools3(
+    n_target: int,
+    backlog_policy: bool,
+    seed: int = 0,
+    fuse: bool = False,
+    cross_pool_fusion: bool = False,
+    repeats: int = 1,
+) -> dict:
+    """The 3-pool registry. backlog_policy=False reproduces PR-1's
+    policies on it (run-queue autoscale trigger, one-way spill);
+    backlog_policy=True turns on backlog-driven autoscale + spill-back.
+    Everything else — pools, bounds, provisioning delays — is identical,
+    so the two rows isolate the policy difference. `fuse` /
+    `cross_pool_fusion` add the fusion layers on top (docs/fusion.md)."""
+    factor = n_target / SEED_DAY_QUERIES
+    def qs_factory():
+        return generate(
+            horizon_s=DAY_S, seed=seed, patterns=scaled_patterns(factor)
+        )
     cfg = SimConfig(
         policy=Policy.FORCE,  # SLA decides the tier; quotes pick the pool
         use_calibration=False,
         seed=seed,
+        fuse_queries=fuse,
+        cross_pool_fusion=cross_pool_fusion,
         sla=SLAConfig(
             vm_overload_threshold=12,
             preempt_best_effort=True,
@@ -178,13 +286,10 @@ def run_day_pools3(n_target: int, backlog_policy: bool, seed: int = 0) -> dict:
             spill_back_enabled=backlog_policy,
             spill_back_low_backlog_s=5.0,
         ),
-        pools=_pools3_specs(autoscale),
+        pools=_pools3_specs(_pools3_autoscale(backlog_policy)),
     )
-    sim = Simulation(cfg)
-    t0 = time.perf_counter()
-    res = sim.run(qs)
-    wall = time.perf_counter() - t0
-    return _report(sim, res, wall, len(qs))
+    sim, res, wall, n = _best_of(cfg, qs_factory, repeats)
+    return _report(sim, res, wall, n)
 
 
 def main() -> None:
@@ -192,24 +297,78 @@ def main() -> None:
     ap.add_argument("--factor", type=float, default=55.0,
                     help="Table-1 count multiplier (55 ~= 50k queries/day)")
     ap.add_argument("--fast", action="store_true",
-                    help="1/10th scale smoke run")
+                    help="1/10th scale smoke run (implies --skip-1m)")
+    ap.add_argument("--skip-1m", action="store_true",
+                    help="skip the 1M-query-day row")
+    ap.add_argument("--fuse-seeds", type=int, default=3,
+                    help="seeds for the fusion dominance rows (0..N-1)")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parents[1] / "BENCH_scale.json"),
+        help="write the full result JSON here")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="fail (exit 1) if any row's wall exceeds this "
+                    "many seconds — the CI scale-smoke regression gate")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="re-run each classic row N times, keep the best "
+                    "wall (results are deterministic; filters machine "
+                    "noise out of the speedup comparison)")
     args = ap.parse_args()
     factor = args.factor / 10 if args.fast else args.factor
     n_target = int(SEED_DAY_QUERIES * factor)
 
     rows = {}
     for name, on in (("engine_off", False), ("engine_on", True)):
-        rows[name] = run_day(n_target, on)
+        rows[name] = run_day(n_target, on, repeats=args.repeats)
         print(f"{name}: {json.dumps(rows[name])}")
     for name, backlog in (
         ("pools3_runqueue", False),
         ("pools3_backlog", True),
     ):
-        rows[name] = run_day_pools3(n_target, backlog)
+        rows[name] = run_day_pools3(n_target, backlog, repeats=args.repeats)
         print(f"{name}: {json.dumps(rows[name])}")
+
+    # fusion rows: within-pool (pending-queue) fusion vs + cross-pool
+    # placement-time fusion, across seeds — the dominance predicate
+    # must hold on EVERY seed
+    fusion_seeds = {}
+    for seed in range(args.fuse_seeds):
+        within = run_day_pools3(n_target, True, seed=seed, fuse=True)
+        cross = run_day_pools3(n_target, True, seed=seed, fuse=True,
+                               cross_pool_fusion=True)
+        fusion_seeds[seed] = {
+            "within": within,
+            "cross": cross,
+            "cross_dominates_within": bool(
+                cross["total_cost"] < within["total_cost"]
+                and cross["imm_p95_wait_s"] <= within["imm_p95_wait_s"]
+            ),
+        }
+        print(f"pools3_fuse seed {seed}: within cost "
+              f"{within['total_cost']} p95 {within['imm_p95_wait_s']} | "
+              f"cross cost {cross['total_cost']} p95 "
+              f"{cross['imm_p95_wait_s']} fusion_rate "
+              f"{cross['fusion_rate']}")
+    if fusion_seeds:
+        rows["pools3_fuse_within"] = fusion_seeds[0]["within"]
+        rows["pools3_fuse_cross"] = fusion_seeds[0]["cross"]
+
+    if not (args.fast or args.skip_1m):
+        # the scaling evidence point: the same no-fusion pools3_backlog
+        # config at 4x scale — the pre-overhaul code never finished this
+        # day (PRE_PR_SCALING); the O(1) engine treats it as routine
+        rows["pools3_200k"] = run_day_pools3(200_000, True)
+        print(f"pools3_200k: {json.dumps(rows['pools3_200k'])}")
+        # the tentpole row: a 1M-query day (20x) through the same 3-pool
+        # registry with cross-pool fusion on
+        rows["pools3_1m"] = run_day_pools3(
+            1_000_000, True, fuse=True, cross_pool_fusion=True
+        )
+        print(f"pools3_1m: {json.dumps(rows['pools3_1m'])}")
 
     on, off = rows["engine_on"], rows["engine_off"]
     bl, rq = rows["pools3_backlog"], rows["pools3_runqueue"]
+    fw = rows.get("pools3_fuse_within")
+    fc = rows.get("pools3_fuse_cross")
     derived = {
         "total_wall_s": round(sum(r["wall_s"] for r in rows.values()), 2),
         "imm_wait_reduction": round(
@@ -221,9 +380,8 @@ def main() -> None:
         "cost_delta_pct": round(
             100 * (on["total_cost"] / max(off["total_cost"], 1e-9) - 1), 2
         ),
-        # the tentpole claim, both numbers from THIS run: backlog-driven
-        # autoscale + spill-back vs PR-1's run-queue policy on the same
-        # 3-pool registry
+        # backlog-driven autoscale + spill-back vs PR-1's run-queue
+        # policy on the same 3-pool registry, from THIS run
         "pools3_cost_delta_pct": round(
             100 * (bl["total_cost"] / max(rq["total_cost"], 1e-9) - 1), 2
         ),
@@ -241,8 +399,68 @@ def main() -> None:
             and bl["capacity_cost"] < rq["capacity_cost"]
             and bl["imm_p95_wait_s"] <= rq["imm_p95_wait_s"]
         ),
+        # cross-pool fusion vs within-pool fusion, per seed AND overall
+        "fuse_cross_cost_delta_pct": round(
+            100 * (fc["total_cost"] / max(fw["total_cost"], 1e-9) - 1), 2
+        ) if fc else None,
+        "cross_fusion_dominates_within": bool(fusion_seeds and all(
+            s["cross_dominates_within"] for s in fusion_seeds.values()
+        )),
+        "fusion_seeds": {
+            seed: {
+                "within_cost": s["within"]["total_cost"],
+                "cross_cost": s["cross"]["total_cost"],
+                "within_imm_p95": s["within"]["imm_p95_wait_s"],
+                "cross_imm_p95": s["cross"]["imm_p95_wait_s"],
+                "cross_fusion_rate": s["cross"]["fusion_rate"],
+                "cross_dominates_within": s["cross_dominates_within"],
+            }
+            for seed, s in fusion_seeds.items()
+        },
     }
+    # hot-path speedup vs the pre-overhaul code, comparable only at the
+    # canonical 50k scale (same seeds, same rows, same machine class)
+    if n_target == PRE_PR_QUERIES:
+        # HEADLINE speedup: against the load-controlled interleaved
+        # baseline — the fair comparison. The loaded-session baseline
+        # is kept as context only (it flatters this run by however much
+        # quieter the machine is now than it was then).
+        fair = PRE_PR_INTERLEAVED["pre_pr_wall_s"]
+        speedups = {
+            name: round(
+                (rows[name]["queries"] / rows[name]["wall_s"])
+                / (PRE_PR_QUERIES / fair[name]), 2,
+            )
+            for name in fair
+        }
+        derived["speedup_vs_pre_pr"] = speedups
+        derived["min_speedup_vs_pre_pr"] = min(speedups.values())
+        derived["pre_pr_interleaved"] = PRE_PR_INTERLEAVED
+        derived["pre_pr_loaded_baseline_wall_s"] = PRE_PR_WALL_S
+        derived["speedup_vs_loaded_baseline"] = {
+            name: round(
+                (rows[name]["queries"] / rows[name]["wall_s"])
+                / (PRE_PR_QUERIES / PRE_PR_WALL_S[name]), 2,
+            )
+            for name in PRE_PR_WALL_S
+        }
+        derived["pre_pr_scaling"] = PRE_PR_SCALING
     print(f"derived: {json.dumps(derived)}")
+
+    out = {"rows": rows, "derived": derived,
+           "n_target": n_target, "factor": factor}
+    Path(args.out).write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {args.out}")
+
+    if args.budget_s is not None:
+        over = {
+            name: r["wall_s"] for name, r in rows.items()
+            if r["wall_s"] > args.budget_s
+        }
+        if over:
+            print(f"FAIL: rows over the {args.budget_s}s wall budget: {over}")
+            raise SystemExit(1)
+        print(f"all rows within the {args.budget_s}s wall budget")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,17 @@ from .insights import CostExplorer, export_trace, price_menu
 from .cost_model import CostModel, Stage, StagePlan
 from .pools import PoolSpec, build_pool, default_pool_specs
 from .query import Query, QueryWork
-from .scheduler import BoEScheduler, QueryCoordinator, RelaxedScheduler, ServiceLayer
+from .scheduler import (
+    BoEScheduler,
+    CrossPoolFusionIndex,
+    PendingQueue,
+    QueryCoordinator,
+    RelaxedScheduler,
+    ServiceLayer,
+    fuse_queries,
+    fusion_key,
+    unpack_fused,
+)
 from .simulator import SimConfig, SimResult, Simulation, run_sim
 from .sla import Policy, ServiceLevel, SLAConfig
 from .workload import TABLE1, generate, scaled_patterns, stream_histogram

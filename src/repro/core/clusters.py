@@ -143,6 +143,22 @@ class CostEfficientCluster(ClusterExecutor):
         self.slice_chips = sos_slice_chips
         self.hw = hw
         self.preempt_best_effort = preempt_best_effort
+        self._shared_rates = mode == "pos"  # POS: processor sharing
+
+    @property
+    def chips(self) -> int:
+        return self._chips
+
+    @chips.setter
+    def chips(self, value: int) -> None:
+        """Capacity is a planning input: changing it invalidates the
+        static-quote cache (load_epoch) and, for POS pools — which plan
+        waiting queries at the full slice — the incremental backlog's
+        waiting sums."""
+        self._chips = value
+        self.load_epoch += 1
+        if getattr(self, "mode", "") == "pos" and self.waiting:
+            self._bl_rebuild_wait()
 
     # --- POS processor-sharing dynamics ---
     def _eff_rate_per_query(self) -> float:
@@ -156,9 +172,11 @@ class CostEfficientCluster(ClusterExecutor):
     def accrue_provisioned(self, now: float) -> None:
         """Reserved-capacity accounting: chip-seconds the slice held
         provisioned up to `now`, whether used or idle ("idle capacity is
-        paid for too"). Accrued on every admission pass regardless of
-        autoscale; callers comparing capacity footprints should call
-        this once more at the horizon end to close the tail interval."""
+        paid for too"). Accrual is LAZY — capacity is piecewise-constant
+        so the sum telescopes: `_apply_pending_scale` closes the open
+        interval before every capacity change, and anything reading
+        `chip_seconds_provisioned` (the benchmark report) must call this
+        once more at its horizon end to close the tail interval."""
         if now > self._last_prov_t:
             self.chip_seconds_provisioned += self.chips * (now - self._last_prov_t)
             self._last_prov_t = now
@@ -171,6 +189,7 @@ class CostEfficientCluster(ClusterExecutor):
         due = [c for t, c in self._pending_scale if t <= now]
         if not due:
             return False
+        self.accrue_provisioned(now)  # close the interval at OLD chips
         changed = due[-1] != self.chips
         self.chips = due[-1]
         self._pending_scale = [
@@ -212,6 +231,27 @@ class CostEfficientCluster(ClusterExecutor):
                 )
             )
             self._pending_scale.append((now + delay, target))
+        if a.trigger == "backlog":
+            self._as_next_eval = self._next_backlog_eval(now, a, target)
+
+    def _next_backlog_eval(self, now: float, a: AutoscaleConfig,
+                           target) -> float:
+        """Earliest future time the backlog trigger's verdict can change
+        WITHOUT a state change (every state change resets the cache to
+        0): between events the drain signal only decays linearly, so the
+        only passive transition is cold turning on when the running
+        work's decay brings the backlog down to the low watermark."""
+        if target is not None or self._pending_scale:
+            return 0.0  # a scale is in flight: tick handles pending
+        if self.waiting or self.chips <= a.min_chips or self._bl_future:
+            return math.inf  # cold can't act; flips only at own events
+        floor = self._bl_future_cs + self._bl_unstarted_cs + self._bl_wait_cs
+        want = a.backlog_low_s * self.chips
+        if floor >= want or self._bl_burn <= 0.0:
+            return math.inf  # decay alone can never reach the watermark
+        # max(tf_burn - t*burn, 0) + floor == want, solved for t (a hair
+        # early: an early re-eval is harmless, a late one skips an event)
+        return (self._bl_tf_burn - (want - floor)) / self._bl_burn - 1e-6
 
     # --- engine hooks -------------------------------------------------
     def _plan_chips(self, q: Query) -> int:
@@ -232,12 +272,46 @@ class CostEfficientCluster(ClusterExecutor):
             return left  # POS work units ARE chip-seconds
         return left * run.chips  # SOS: wall-seconds on an isolated slice
 
+    def _run_cs_factor(self, run: _Run) -> float:
+        return 1.0 if self.mode == "pos" else float(run.chips)
+
     def drain_time_s(self, now=None) -> float:
         return self.predicted_backlog_s(now) / max(self.chips, 1)
 
+    @property
+    def needs_tick(self) -> bool:
+        return self.autoscale.enabled
+
+    def tick(self, now: float) -> None:
+        """Per-event bookkeeping when this pool has no completion due:
+        apply a due capacity change (it may admit waiters — full
+        admission pass), and re-evaluate the backlog autoscale trigger,
+        whose drain-time signal decays continuously between this pool's
+        own events. Run-queue state only changes at own events, so the
+        run_queue trigger needs no tick. Amortized O(1): the trigger is
+        only re-evaluated once `now` reaches ``_as_next_eval``, the
+        pre-computed earliest time the linearly-decaying drain signal
+        can change the verdict (any state change recomputes it)."""
+        a = self.autoscale
+        if not a.enabled:
+            return
+        if self._pending_scale:
+            if self._pending_scale[0][0] <= now:
+                self._admit(now)
+            return
+        if a.trigger == "backlog" and now + 1e-9 >= self._as_next_eval:
+            self._schedule_autoscale(now)
+
+    def tick_due(self, now: float) -> bool:
+        a = self.autoscale
+        if not a.enabled:
+            return False
+        if self._pending_scale:
+            return self._pending_scale[0][0] <= now
+        return a.trigger == "backlog" and now + 1e-9 >= self._as_next_eval
+
     def quote(self, q: Query, now=None) -> dict:
-        plan = self.cost_model.plan(q.work, self.effective_chips(q))
-        exec_s = plan.remaining_time(q.stage_cursor)
+        exec_s, _, cost = self._static_quote(q)
         if self.mode == "pos":
             # PS: joining k runners divides the slice and adds the
             # concurrency interference penalty
@@ -247,7 +321,7 @@ class CostEfficientCluster(ClusterExecutor):
             # SOS: deterministic slice time + predicted wait for a slice
             wait = 0.0 if self.has_capacity() else self.drain_time_s(now)
             latency = wait + exec_s
-        return {"latency_s": latency, "cost": self.quote_cost(q)}
+        return {"latency_s": latency, "cost": cost}
 
     def _run_rate(self, run: _Run) -> float:
         if self.mode == "pos":
@@ -281,16 +355,17 @@ class CostEfficientCluster(ClusterExecutor):
 
     def _pop_waiting(self) -> Query:
         # SOS slice handoff: IMMEDIATE first, FIFO within a level (POS
-        # admission pops FIFO directly in _admit)
-        best = min(
-            range(len(self.waiting)),
-            key=lambda i: (int(self.waiting[i].current_sla), i),
-        )
-        return self.waiting.pop(best)
+        # admission pops FIFO directly in _admit) — O(1) from the
+        # waiting queue's per-level lanes
+        return self.waiting.pop_best()
 
     def _admit(self, now: float) -> None:
-        self.accrue_provisioned(now)
-        if self._apply_pending_scale(now):
+        # provisioned-capacity accrual is lazy (piecewise-constant chips
+        # telescope): _apply_pending_scale closes intervals before any
+        # capacity change, report paths close the tail — no need to
+        # accrue on every admission
+        scaling = self.autoscale.enabled
+        if scaling and self._pending_scale and self._apply_pending_scale(now):
             self._rates_changed(now)
         if self.mode == "pos":
             admitted = False
@@ -299,25 +374,37 @@ class CostEfficientCluster(ClusterExecutor):
                 admitted = True
             if admitted:
                 self._rates_changed(now)
-            self._schedule_autoscale(now)
+            if scaling:
+                self._schedule_autoscale(now)
             return
         # SOS: fixed-size isolated slices
-        used = len(self.running) * self.slice_chips
-        while self.waiting and used + self.slice_chips <= self.chips:
-            self._start_run(self._pop_waiting(), now)
-            used += self.slice_chips
-        self._schedule_autoscale(now)
+        if self.waiting:
+            used = len(self.running) * self.slice_chips
+            while self.waiting and used + self.slice_chips <= self._chips:
+                self._start_run(self._pop_waiting(), now)
+                used += self.slice_chips
+        if scaling:
+            self._schedule_autoscale(now)
         # stage-boundary preemption: a waiting IMMEDIATE query may bump a
         # running BEST_EFFORT query at its next stage boundary; requests
         # are re-derived from the CURRENT waiting queue each admission so
-        # a flag goes away when its IMMEDIATE found a slice elsewhere
+        # a flag goes away when its IMMEDIATE found a slice elsewhere.
         if self.preempt_best_effort:
-            n_imm = sum(
-                1 for q in self.waiting if q.current_sla is ServiceLevel.IMMEDIATE
-            )
+            self._rederive_preempt_flags()
+
+    def _rederive_preempt_flags(self) -> None:
+        """Match preempt flags to the IMMEDIATE waiter count. The
+        O(running) re-derivation only runs when flags could change
+        (IMMEDIATE waiter count != currently flagged runs) — the common
+        no-preemption event is O(1). Called at every admission AND when
+        fusion withdraws a waiter (the withdrawn IMMEDIATE must take
+        its preempt request with it)."""
+        n_imm = self.waiting.counts[int(ServiceLevel.IMMEDIATE)]
+        if n_imm != len(self._flagged):
             flagged = [r for r in self.running if r.preempt_requested]
-            for run in flagged[n_imm:]:  # stale: nobody is waiting for it
+            for run in flagged[n_imm:]:  # stale: nobody waits for it
                 run.preempt_requested = False
+                self._flagged.discard(run)
             need = n_imm - min(len(flagged), n_imm)
             for run in self.running:
                 if need <= 0:
@@ -327,7 +414,12 @@ class CostEfficientCluster(ClusterExecutor):
                     and run.query.current_sla is ServiceLevel.BEST_EFFORT
                 ):
                     run.preempt_requested = True
+                    self._flagged.add(run)
                     need -= 1
+
+    def _waiter_withdrawn(self, q: Query) -> None:
+        if self.preempt_best_effort and self.mode == "sos":
+            self._rederive_preempt_flags()
 
     def _continue_run(self, run: _Run, now: float) -> bool:
         if self.mode != "sos":

@@ -184,6 +184,19 @@ class CostModel:
         self._plan_cache.clear()
         self._cal_version = -1
 
+    def plan_version(self) -> int:
+        """The active calibration table's version (0 when uncalibrated)
+        — what plan-derived caches (the executors' static quotes, the
+        incremental backlog's waiting sums) validate against so a hot
+        swap invalidates them exactly like the plan cache itself."""
+        cal = self.calibration
+        if cal is not None:
+            return cal.version
+        if not self.use_calibration:  # hot path: no table can exist
+            return 0
+        table = self._table()
+        return table.version if table is not None else 0
+
     @property
     def effective_speed_factor(self) -> float:
         """The speed quotes are made at: the table's fitted value when
@@ -202,8 +215,7 @@ class CostModel:
         # versioned cache: a calibration update (hot swap, re-fit,
         # default-table invalidation) must reach the next plan() call —
         # the old cache never invalidated, so updates silently no-opped
-        table = self._table()
-        ver = table.version if table is not None else 0
+        ver = self.plan_version()
         if ver != self._cal_version:
             self._plan_cache.clear()
             self._cal_version = ver

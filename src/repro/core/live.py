@@ -48,7 +48,7 @@ from .pools import (
     fit_spec_calibration,
 )
 from .query import Query, QueryWork
-from .scheduler import QueryCoordinator, ServiceLayer
+from .scheduler import QueryCoordinator, ServiceLayer, unpack_fused
 from .sla import Policy, ServiceLevel, SLAConfig
 
 
@@ -220,6 +220,29 @@ class LiveExecutor(ClusterExecutor):
             for q in qs
         )
 
+    def has_displacing_waiter(self, q: Query) -> bool:
+        # live pools mutate `waiting` from worker threads: take a locked
+        # snapshot scan instead of the sim's per-level counts
+        with self._mu:
+            return any(
+                w.current_sla is not ServiceLevel.BEST_EFFORT
+                and w.current_sla <= q.current_sla
+                for w in self.waiting
+            )
+
+    def withdraw(self, q: Query) -> bool:
+        """Claim a waiting query for placement-time fusion. Locked and
+        authoritative: False means a worker (or another fusion) already
+        took it, and the caller must not fuse it."""
+        with self._cv:
+            try:
+                self.waiting.remove(q)
+            except ValueError:
+                return False
+            if self.wait_observer is not None:
+                self.wait_observer.discard(q)
+            return True
+
     # --- lifecycle -----------------------------------------------------
     def start(self) -> None:
         """Begin consuming work (called after the coordinator wires
@@ -324,6 +347,8 @@ class LiveExecutor(ClusterExecutor):
                 if cur is not None and cur[1] is token:
                     del self.running[q.qid]
                 self.waiting.append(q)  # resumes at stage_cursor
+                if self.wait_observer is not None:
+                    self.wait_observer.add(self, q)  # no-op: cursor > 0
                 self._cv.notify_all()
             return True
         if self.rehome is not None:
@@ -383,6 +408,8 @@ class LiveReservedPool(LiveExecutor):
         q.cluster = self.name
         with self._cv:
             self.waiting.append(q)
+            if self.wait_observer is not None:  # shared fusion index
+                self.wait_observer.add(self, q)
             self._cv.notify_all()
 
     def _pop_waiting_locked(self) -> Query:
@@ -392,7 +419,10 @@ class LiveReservedPool(LiveExecutor):
             range(len(self.waiting)),
             key=lambda i: (int(self.waiting[i].current_sla), i),
         )
-        return self.waiting.pop(best)
+        q = self.waiting.pop(best)
+        if self.wait_observer is not None:
+            self.wait_observer.discard(q)
+        return q
 
     def _worker(self) -> None:
         stop = self.engine._stop
@@ -430,8 +460,9 @@ class LiveElasticPool(LiveExecutor):
     def __init__(self, spec: PoolSpec, engine: "LiveEngine"):
         super().__init__(spec, engine)
         self.startup_s = spec.startup_s
+        self.workers = max(1, spec.chips)
         self._exec = ThreadPoolExecutor(
-            max_workers=max(1, spec.chips),
+            max_workers=self.workers,
             thread_name_prefix=f"live-{spec.name}",
         )
 
@@ -441,7 +472,16 @@ class LiveElasticPool(LiveExecutor):
         self._exec.shutdown(wait=True, cancel_futures=True)
 
     def _queue_delay_estimate(self, q: Query, now: Optional[float]) -> float:
-        return self.startup_s
+        """Unlike the sim's unbounded burst tier, the live pool runs at
+        most ``workers`` concurrent tasks — a saturated pool must quote
+        the predicted drain of the work already committed to it, not
+        just the provisioning sleep, or it under-quotes latency exactly
+        when it is overloaded."""
+        with self._mu:
+            saturated = len(self.running) >= self.workers
+        if not saturated:
+            return self.startup_s
+        return self.startup_s + self.predicted_backlog_s(now) / self.workers
 
     def submit(self, q: Query, now: float) -> None:
         q.cluster = self.name
@@ -499,6 +539,13 @@ class LiveConfig:
     #: JSON persistence: fitted state is loaded from here at startup and
     #: re-saved on every applied update (None keeps it in-memory)
     calibration_path: Optional[str] = None
+    #: multi-query fusion: batch compatible pending queries (docs/fusion.md)
+    fuse_queries: bool = False
+    #: placement-time fusion across pools — live pools share the
+    #: coordinator's CrossPoolFusionIndex, so compatible queries waiting
+    #: on different pools merge into one batched jitted execution
+    cross_pool_fusion: bool = False
+    fuse_max: int = 8
 
 
 class LiveEngine:
@@ -535,10 +582,15 @@ class LiveEngine:
             for pool in self.pools:  # apply persisted fits before work
                 self.calibrator.maybe_apply(pool)
         self.coordinator = QueryCoordinator(
-            self.pools, policy=cfg.policy, cfg=cfg.sla
+            self.pools, policy=cfg.policy, cfg=cfg.sla,
+            cross_pool_fusion=cfg.fuse_queries and cfg.cross_pool_fusion,
+            fuse_max=cfg.fuse_max,
         )
         self.coordinator.wire_rehoming()
-        self.service = ServiceLayer(self.coordinator, cfg.sla, cfg.sla_enabled)
+        self.service = ServiceLayer(
+            self.coordinator, cfg.sla, cfg.sla_enabled,
+            fuse=cfg.fuse_queries, fuse_max=cfg.fuse_max,
+        )
         for pool in self.pools:  # consume only once rehoming is wired
             pool.start()
         self._sched_thread = threading.Thread(
@@ -598,8 +650,11 @@ class LiveEngine:
         q.finish_time = self.now()
         q.state = "done"
         self._drop_ckpt(q)
+        # a fused query completes as its members: times shared, billing
+        # split by tokens with the exact-sum repair (same helper as the
+        # simulator), so drain() counts each submitted query once
         with self._lock:
-            self.done.append(q)
+            self.done.extend(unpack_fused(q))
 
     def _fail(self, q: Query, err: BaseException) -> None:
         with self._lock:
@@ -608,7 +663,7 @@ class LiveEngine:
             q.finish_time = self.now()
             q.state = "failed"
             q.error = f"{type(err).__name__}: {err}"
-            self.failed.append(q)
+            self.failed.extend(unpack_fused(q))
         self._drop_ckpt(q)
 
     # ------------------------------------------------------------------

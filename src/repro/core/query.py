@@ -16,7 +16,7 @@ from .sla import ServiceLevel
 _qid = itertools.count()
 
 
-@dataclass
+@dataclass(slots=True)
 class QueryWork:
     """Work descriptor, independent of where it runs."""
 
@@ -35,8 +35,14 @@ class QueryWork:
         return self.batch * (self.prompt_tokens + self.output_tokens)
 
 
-@dataclass
+@dataclass(eq=False, slots=True)
 class Query:
+    """eq=False: queries are identities, not values — two queries with
+    the same work are still distinct units of billing, queue membership
+    is an O(1) identity check, and a query can key the fusion index /
+    waiting-lane maps directly. slots=True: a 1M-query day allocates a
+    million of these; slotted instances are ~4x smaller and faster."""
+
     work: QueryWork
     sla: ServiceLevel
     submit_time: float
@@ -66,6 +72,13 @@ class Query:
     spilled: bool = False
     spill_backs: int = 0  # returns from an elastic pool to a reserved one
     stage_trace: list = field(default_factory=list)  # StageEvent records
+
+    # multi-query fusion (scheduler.fuse_queries / cross-pool placement)
+    #: on a MERGED query: the member queries it was fused from
+    members: Optional[list] = None
+    #: on a member after unpack: size of the fused group it ran in
+    #: (0 = ran alone) — what benchmark fusion rates are computed from
+    fused_with: int = 0
 
     @property
     def current_sla(self) -> ServiceLevel:

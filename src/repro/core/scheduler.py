@@ -7,15 +7,40 @@ Force/Auto/latency-aware policy. The registry generalizes the paper's
 hardcoded vm/cf pair: "reserved" pools form the cost-efficient tier,
 "elastic" pools the premium burst tier, and every placement decision —
 routing, spill, spill-back — is made from the same quotes.
+
+Multi-query fusion (paper §3.3) happens in two places, both indexed so a
+fusable group is an O(1) lookup instead of a queue scan:
+
+  * pending-queue fusion — ``PendingQueue`` buckets waiting queries by
+    their fusion key, so ``pop_fused`` takes the head's group straight
+    from its bucket (FIFO within the bucket) instead of copying and
+    re-scanning the deque per pop;
+  * cross-pool placement-time fusion — ``CrossPoolFusionIndex`` tracks
+    every eligible WAITING query across ALL pools; when the coordinator
+    routes a new query it pulls compatible waiters out of their pools
+    (``pool.withdraw``) and places one merged query, so queries queued
+    on *different* pools still share one batched execution. Fused
+    billing splits by tokens at unpack (``unpack_fused``) with an
+    exact-sum repair, through the same ``engine.account_stage``
+    arithmetic as everything else.
 """
 from __future__ import annotations
 
+import math
+import threading
 from collections import deque
 from typing import Iterable, Optional, Union
 
 from .engine import ClusterExecutor
 from .query import Query, QueryWork
 from .sla import Policy, ServiceLevel, SLAConfig
+
+
+def fusion_key(work: QueryWork) -> tuple:
+    """Bucket key for fusion safety: identical (arch, kind, prompt,
+    output) only — a train query must never fuse with a serve query, and
+    mismatched decode lengths would mis-bill the shorter members."""
+    return (work.arch, work.kind, work.prompt_tokens, work.output_tokens)
 
 
 def fuse_queries(queries: list[Query], now: float) -> Query:
@@ -38,45 +63,268 @@ def fuse_queries(queries: list[Query], now: float) -> Query:
         submit_time=min(q.submit_time for q in queries),
         source=head.source,
     )
-    merged.members = queries  # type: ignore[attr-defined]
+    merged.members = queries
+    merged.effective_sla = head.effective_sla
+    # the batch must honor the most restrictive execution-time SLA of
+    # its members (LATENCY_AWARE routing reads it)
+    targets = [q.latency_target_s for q in queries
+               if q.latency_target_s is not None]
+    merged.latency_target_s = min(targets) if targets else None
     for q in queries:
-        q.dequeue_time = now
+        # members pulled out of a pool's waiting queue (cross-pool
+        # fusion) already left the SLA pending queue — their pending
+        # time is settled and must not be restamped
+        if q.dequeue_time is None:
+            q.dequeue_time = now
     return merged
 
 
-def _fusable(head: Query, q: Query) -> bool:
-    """Fusion safety: identical (arch, kind, prompt, output) only — a
-    train query must never fuse with a serve query, and mismatched
-    decode lengths would mis-bill the shorter members."""
-    return (
-        q.work.arch == head.work.arch
-        and q.work.kind == head.work.kind
-        and q.work.prompt_tokens == head.work.prompt_tokens
-        and q.work.output_tokens == head.work.output_tokens
-    )
+def unpack_fused(q: Query) -> list[Query]:
+    """Expand a finished fused query back into its members: times are
+    shared, billed cost/chip-seconds split by each member's token share.
+    The split is repaired to sum EXACTLY to the fused run's totals — the
+    float residue of the share products is folded into the last member
+    (explicitly, never silently left on member 0, which also carries
+    the fused trace/counters) and the exact-sum invariant is asserted."""
+    members = q.members
+    if not members:
+        return [q]
+    tot = sum(m.work.total_tokens for m in members)
+    for i, m in enumerate(members):
+        share = m.work.total_tokens / max(tot, 1)
+        m.start_time = q.start_time
+        m.finish_time = q.finish_time
+        m.cluster = q.cluster
+        m.state = q.state
+        m.error = q.error
+        m.fused_with = len(members)
+        m.chip_seconds = q.chip_seconds * share
+        m.cost = q.cost * share
+        if i == 0:  # the fused run's stage trace and engine counters
+            m.stage_trace = q.stage_trace  # live on one member so
+            m.retries = q.retries  # summaries stay exact
+            m.preemptions = q.preemptions
+            m.spilled = q.spilled
+            m.spill_backs = q.spill_backs
+    for attr, total in (("chip_seconds", q.chip_seconds), ("cost", q.cost)):
+        _repair_exact_sum(members, attr, total)
+        assert sum(getattr(m, attr) for m in members) == total, (
+            f"fused {attr} split does not sum to the fused total "
+            f"({total!r}) for Q{q.qid}"
+        )
+    return members
 
 
-def pop_fused(queue: deque, now: float, fuse: bool, fuse_max: int) -> Query:
+def _repair_exact_sum(members: list[Query], attr: str, total: float) -> None:
+    """Adjust the LAST member so the members' left-to-right float sum
+    equals `total` bit-for-bit. The last member is the only position
+    whose value passes through a SINGLE rounding (the final addition):
+    ``fl(prefix + x) == total`` holds for every x in an interval one
+    ulp of `total` wide, which always contains representables (x is no
+    larger than the total), so the algebraic solution ``total - prefix``
+    plus at most a few one-ulp nudges lands the exact hit. Repairing
+    any earlier position composes several roundings whose steps can
+    jump PAST the total — that is how mixed-batch splits used to trip
+    the caller's exactness assert. The residue is explicit, never
+    silently parked on member 0 (with one member there is no residue)."""
+    values = [getattr(m, attr) for m in members]
+    if sum(values) == total:
+        return
+    prefix = sum(values[:-1])
+    # Parity trap: when the last member dominates, x lives in the
+    # total's own binade (ulp(x) == ulp(total)) and a prefix that is an
+    # ODD multiple of ulp(total)/2 makes EVERY candidate sum land
+    # exactly on a round-to-even tie — no representable x can produce
+    # `total`. Escape by adding exactly one ulp OF THE PREFIX to the
+    # second-to-last member: that single-rounding addition moves the
+    # prefix by exactly one of its grid steps, flipping its parity.
+    for _ in range(8):
+        x = total - prefix
+        for _ in range(8):
+            s = prefix + x
+            if s == total:
+                setattr(members[-1], attr, x)
+                return
+            x = math.nextafter(x, math.inf if s < total else -math.inf)
+        if len(members) < 2:
+            break
+        values[-2] += math.ulp(prefix)
+        setattr(members[-2], attr, values[-2])
+        prefix = sum(values[:-1])
+
+
+class PendingQueue:
+    """A scheduler pending queue: FIFO overall, with waiting queries
+    bucketed by fusion key so a fused pop takes its group in O(group)
+    instead of copying and scanning the whole deque (the old
+    ``pop_fused``). Entries removed through a bucket leave a stale main-
+    deque copy (and vice versa) that is skipped lazily, so every
+    operation is amortized O(1). With ``fuse=False`` the bucket/stale
+    bookkeeping is skipped entirely — stale bucket copies would
+    otherwise accumulate forever, since only ``take_fusable`` consumes
+    them."""
+
+    __slots__ = ("_q", "_buckets", "_stale", "_n", "_fuse")
+
+    def __init__(self, fuse: bool = True):
+        self._q: deque[Query] = deque()
+        self._buckets: dict[tuple, deque[Query]] = {}
+        self._stale: dict[Query, int] = {}  # query -> stale copies left
+        self._n = 0
+        self._fuse = fuse
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+    def __iter__(self):
+        return (q for q in self._q if q not in self._stale)
+
+    def __getitem__(self, i: int) -> Query:
+        if i != 0:
+            raise IndexError("PendingQueue only exposes its head")
+        return self.head()
+
+    def _consume_stale(self, q: Query) -> bool:
+        c = self._stale.get(q)
+        if not c:
+            return False
+        if c == 1:
+            del self._stale[q]
+        else:
+            self._stale[q] = c - 1
+        return True
+
+    def append(self, q: Query) -> None:
+        self._q.append(q)
+        self._n += 1
+        if self._fuse and q.work.kind == "serve":
+            self._buckets.setdefault(fusion_key(q.work), deque()).append(q)
+
+    def head(self) -> Query:
+        while self._q and self._q[0] in self._stale:
+            self._consume_stale(self._q.popleft())
+        return self._q[0]
+
+    def popleft(self) -> Query:
+        q = self.head()
+        self._q.popleft()
+        self._n -= 1
+        if self._fuse and q.work.kind == "serve":
+            self._stale[q] = self._stale.get(q, 0) + 1  # bucket copy
+        return q
+
+    def take_fusable(self, head: Query, limit: int) -> list[Query]:
+        """Up to `limit` queries fusable with `head`, in FIFO order —
+        straight off the head's bucket, no queue scan."""
+        key = fusion_key(head.work)
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            return []
+        out: list[Query] = []
+        while bucket and len(out) < limit:
+            q = bucket.popleft()
+            if self._consume_stale(q):
+                continue  # head itself, or already popped via the deque
+            out.append(q)
+            self._n -= 1
+            self._stale[q] = self._stale.get(q, 0) + 1  # main-deque copy
+        if not bucket:
+            del self._buckets[key]
+        return out
+
+
+def pop_fused(queue: PendingQueue, now: float, fuse: bool, fuse_max: int) -> Query:
     """Pop the queue head, fusing compatible waiting queries behind it.
     Shared by the relaxed and BoE schedulers so both apply the same
     matching rules. Only serve queries fuse (train steps don't batch)."""
     head = queue.popleft()
     if not fuse or head.work.kind != "serve":
         return head
-    same = [q for q in list(queue) if _fusable(head, q)][: fuse_max - 1]
-    for q in same:
-        queue.remove(q)
+    same = queue.take_fusable(head, fuse_max - 1)
+    if not same:
+        return head
     return fuse_queries([head] + same, now)
+
+
+class CrossPoolFusionIndex:
+    """Registry-wide fusion index (the ROADMAP cross-pool item): every
+    eligible WAITING query — fresh, serve, not yet started — is indexed
+    by fusion key the moment it enters ANY pool's waiting queue, and
+    dropped the moment it leaves. The coordinator consults it at
+    placement time, so compatible queries queued on different pools fuse
+    into one batched execution instead of running separately.
+
+    Thread-safe: live pools (core/live.py) mutate their waiting queues
+    from worker threads and share this index with the coordinator."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        # key -> {query: pool}; dict preserves insertion order, so FIFO
+        # within a bucket holds across pools
+        self._buckets: dict[tuple, dict[Query, ClusterExecutor]] = {}
+
+    @staticmethod
+    def _eligible(q: Query) -> bool:
+        return (
+            q.work.kind == "serve"
+            and q.stage_cursor == 0
+            and q.state == "pending"
+            and q.members is None
+        )
+
+    def add(self, pool: ClusterExecutor, q: Query) -> None:
+        if not self._eligible(q):
+            return
+        with self._lock:
+            self._buckets.setdefault(fusion_key(q.work), {})[q] = pool
+
+    def discard(self, q: Query) -> None:
+        key = fusion_key(q.work)
+        with self._lock:
+            bucket = self._buckets.get(key)
+            if bucket is not None and bucket.pop(q, None) is not None:
+                if not bucket:
+                    del self._buckets[key]
+
+    def candidates(
+        self, q: Query, limit: int
+    ) -> list[tuple[Query, ClusterExecutor]]:
+        """Fusable waiting mates for `q` (same key AND same service
+        level — a BoE waiter must not ride an IMMEDIATE head's tier),
+        FIFO, as (query, owning pool) snapshot pairs."""
+        with self._lock:
+            bucket = self._buckets.get(fusion_key(q.work))
+            if not bucket:
+                return []
+            out = []
+            for m, pool in bucket.items():
+                if m is q or m.current_sla is not q.current_sla:
+                    continue
+                out.append((m, pool))
+                if len(out) >= limit:
+                    break
+            return out
 
 
 class QueryCoordinator:
     """Places a dequeued query on one pool of the registry (paper §4.3,
     generalized): every decision reads per-pool remaining-stage quotes,
-    not a hardcoded vm/cf branch.
+    not a hardcoded vm/cf branch. Quotes are served from each pool's
+    static-quote cache (engine.ClusterExecutor._static_quote), so the
+    per-query all-pools loop re-plans only when a calibration version or
+    pool load epoch changed.
 
     Accepts either a pool list or the legacy ``(vm, cf)`` pair. The
     first reserved pool is exposed as ``.vm`` and the first elastic pool
     as ``.cf`` for the two-pool system the paper describes.
+
+    With ``cross_pool_fusion=True`` the coordinator maintains a
+    ``CrossPoolFusionIndex`` over every pool's waiting queue and merges
+    compatible waiters into each newly placed query (``fuse_max`` caps
+    the batch, like the pending-queue fusion it extends).
     """
 
     def __init__(
@@ -85,6 +333,8 @@ class QueryCoordinator:
         cf: Optional[ClusterExecutor] = None,
         policy: Policy = Policy.AUTO,
         cfg: Optional[SLAConfig] = None,
+        cross_pool_fusion: bool = False,
+        fuse_max: int = 8,
     ):
         if isinstance(pools, ClusterExecutor):
             pools = [pools] + ([cf] if cf is not None else [])
@@ -99,6 +349,18 @@ class QueryCoordinator:
         self.by_name = {p.name: p for p in self.pools}
         self.policy = policy
         self.cfg = cfg or SLAConfig()
+        self.fuse_max = fuse_max
+        #: service levels eligible for placement-time fusion (see the
+        #: route() gate for why RELAXED is not in the default set)
+        self.cross_fuse_levels: tuple = (
+            ServiceLevel.IMMEDIATE,
+            ServiceLevel.BEST_EFFORT,
+        )
+        self.fusion: Optional[CrossPoolFusionIndex] = None
+        if cross_pool_fusion:
+            self.fusion = CrossPoolFusionIndex()
+            for p in self.pools:
+                p.wait_observer = self.fusion
         self.reserved_pools = [
             p for p in self.pools if p.pool_kind == "reserved"
         ]
@@ -116,17 +378,23 @@ class QueryCoordinator:
         all-elastic registry is never overloaded — burst capacity is
         unbounded, so holding relaxed queries back would only invert
         priority against BoE, which drains freely."""
-        if not self.reserved_pools:
+        rp = self.reserved_pools
+        if not rp:
             return False
-        return all(self.pool_overloaded(p) for p in self.reserved_pools)
+        if len(rp) == 1:  # hot path: the paper's single-VM system
+            return rp[0].run_queue_len >= self.cfg.vm_overload_threshold
+        return all(self.pool_overloaded(p) for p in rp)
 
     @property
     def reserved_min_queue_len(self) -> int:
         """Shortest run queue across the cost-efficient tier (the BoE
         drain signal; with one reserved pool: its run-queue length)."""
-        if not self.reserved_pools:
+        rp = self.reserved_pools
+        if not rp:
             return 0
-        return min(p.run_queue_len for p in self.reserved_pools)
+        if len(rp) == 1:
+            return rp[0].run_queue_len
+        return min(p.run_queue_len for p in rp)
 
     # ------------------------------------------------------------------
     # Beyond-paper: execution-time SLAs. The deterministic SOS cost model
@@ -154,17 +422,11 @@ class QueryCoordinator:
         pool = pool or self.vm
         if q.current_sla is ServiceLevel.BEST_EFFORT:
             return False
-        # snapshot: live pools mutate `waiting` from worker threads while
-        # this policy runs at another worker's stage boundary
-        displacing_waiter = any(
-            w.current_sla is not ServiceLevel.BEST_EFFORT
-            and w.current_sla <= q.current_sla
-            for w in list(pool.waiting)
-        )
-        if not displacing_waiter:
+        # O(1) per-level waiting counts (live pools override with a
+        # locked snapshot scan — their worker threads mutate `waiting`)
+        if not pool.has_displacing_waiter(q):
             return False
-        plan = pool.cost_model.plan(q.work, pool.effective_chips(q))
-        return plan.remaining_time(q.stage_cursor) >= self.cfg.spill_min_remaining_s
+        return pool.remaining_exec_s(q) >= self.cfg.spill_min_remaining_s
 
     def rehome(
         self, pool: ClusterExecutor, q: Query, now: float
@@ -194,8 +456,7 @@ class QueryCoordinator:
                 continue
             if p.drain_time_s(now) > self.cfg.spill_back_low_backlog_s:
                 continue
-            plan = p.cost_model.plan(q.work, p.effective_chips(q))
-            if plan.remaining_time(q.stage_cursor) < self.cfg.spill_min_remaining_s:
+            if p.remaining_exec_s(q) < self.cfg.spill_min_remaining_s:
                 continue  # the last chunk is not worth the hop
             eligible.append(p)
         if not eligible:
@@ -223,7 +484,45 @@ class QueryCoordinator:
                     lambda q, now, _pool=pool: self.rehome(_pool, q, now)
                 )
 
+    def _fuse_at_placement(self, q: Query, now: float) -> Query:
+        """Cross-pool fusion: pull compatible waiters out of their
+        pools and merge them into the query being placed; the merged
+        batch then routes by the normal quote rules. A mate a pool no
+        longer holds (a live worker grabbed it concurrently) is skipped
+        — `withdraw` is the authoritative claim."""
+        mates: list[Query] = []
+        for m, pool in self.fusion.candidates(q, self.fuse_max - 1):
+            if pool.withdraw(m):
+                mates.append(m)
+        if not mates:
+            return q
+        return fuse_queries([q] + mates, now)
+
     def route(self, q: Query, now: float) -> str:
+        if (
+            self.fusion is not None
+            and q.members is None
+            and q.work.kind == "serve"
+            and q.stage_cursor == 0
+            # placement-time fusion targets the populations the pending
+            # queues cannot batch: IMMEDIATE queries route instantly
+            # (they never sit in a scheduler queue, so cross-pool
+            # fusion is their ONLY batching path) and BEST_EFFORT work
+            # is a pure cost play. RELAXED work is deliberately left to
+            # the relaxed pending queue, which sees whole dashboard
+            # rounds before placement — re-merging it here only coarsens
+            # stage granularity (benchmarks/scale.py fusion rows).
+            and q.current_sla in self.cross_fuse_levels
+            # an IMMEDIATE arrival fuses only when a reserved slice is
+            # free for it: the batch starts NOW and pulls its waiting
+            # mates forward with it. When everything is busy the arrival
+            # must not gamble its own latency on a batch that queues.
+            and (
+                q.current_sla is not ServiceLevel.IMMEDIATE
+                or any(p.has_capacity() for p in self.reserved_pools)
+            )
+        ):
+            q = self._fuse_at_placement(q, now)
         sla = q.current_sla
         if self.policy is Policy.LATENCY_AWARE:
             est = self.estimate(q, now)
@@ -269,7 +568,7 @@ class RelaxedScheduler:
 
     def __init__(self, coordinator: QueryCoordinator, cfg: SLAConfig,
                  fuse: bool = False, fuse_max: int = 8):
-        self.q: deque[Query] = deque()
+        self.q = PendingQueue(fuse=fuse)
         self.coordinator = coordinator
         self.cfg = cfg
         self.fuse = fuse
@@ -281,7 +580,7 @@ class RelaxedScheduler:
     def poll(self, now: float) -> list[Query]:
         out = []
         while self.q:
-            head = self.q[0]
+            head = self.q.head()
             deadline_near = (
                 now - head.submit_time
                 >= self.cfg.relaxed_deadline_s * self.cfg.deadline_slack
@@ -301,7 +600,7 @@ class BoEScheduler:
 
     def __init__(self, coordinator: QueryCoordinator, cfg: SLAConfig,
                  fuse: bool = False, fuse_max: int = 8):
-        self.q: deque[Query] = deque()
+        self.q = PendingQueue(fuse=fuse)
         self.coordinator = coordinator
         self.cfg = cfg
         self.fuse = fuse
@@ -330,12 +629,15 @@ class ServiceLayer:
         cfg: SLAConfig,
         sla_enabled: bool = True,
         fuse: bool = False,
+        fuse_max: int = 8,
     ):
         self.coordinator = coordinator
         self.cfg = cfg
         self.sla_enabled = sla_enabled
-        self.relaxed = RelaxedScheduler(coordinator, cfg, fuse=fuse)
-        self.boe = BoEScheduler(coordinator, cfg, fuse=fuse)
+        self.relaxed = RelaxedScheduler(coordinator, cfg, fuse=fuse,
+                                        fuse_max=fuse_max)
+        self.boe = BoEScheduler(coordinator, cfg, fuse=fuse,
+                                fuse_max=fuse_max)
 
     def submit(self, q: Query, now: float) -> None:
         # the paper's "w/o SLA" baseline rewrites every query to immediate
@@ -351,9 +653,11 @@ class ServiceLayer:
         else:
             self.boe.enqueue(q)
 
-    def poll(self, now: float) -> None:
-        self.relaxed.poll(now)
-        self.boe.poll(now)
+    def poll(self, now: float) -> int:
+        """Poll both pending queues; returns how many queries were
+        dequeued and routed (the simulator skips its pool pass when an
+        idle poll moved nothing)."""
+        return len(self.relaxed.poll(now)) + len(self.boe.poll(now))
 
     @property
     def pending(self) -> int:

@@ -26,7 +26,7 @@ from .engine import StageEvent
 from .insights import cluster_shares
 from .pools import PoolSpec, build_pool, default_pool_specs
 from .query import Query
-from .scheduler import QueryCoordinator, ServiceLayer
+from .scheduler import QueryCoordinator, ServiceLayer, unpack_fused
 from .sla import Policy, ServiceLevel, SLAConfig
 
 
@@ -46,6 +46,13 @@ class SimConfig:
     fault: FaultModel = field(default_factory=FaultModel)
     autoscale: AutoscaleConfig = field(default_factory=AutoscaleConfig)
     fuse_queries: bool = False  # beyond-paper: multi-query batch fusion
+    #: placement-time fusion ACROSS pools (docs/fusion.md): the
+    #: coordinator indexes every pool's waiting queue and merges
+    #: compatible waiters into each newly placed query. Only meaningful
+    #: with fuse_queries=True; off, runs are bit-identical to within-
+    #: pool (pending-queue) fusion alone.
+    cross_pool_fusion: bool = False
+    fuse_max: int = 8  # max queries per fused batch (both fusion layers)
     horizon_s: Optional[float] = None  # stop collecting after this time
     #: decode stages are chunked to at most this many tokens, making long
     #: generations preemptible/retryable at chunk granularity (0 = off)
@@ -135,6 +142,7 @@ class SimResult:
             if by["imm"]
             else 0.0,
             "stages": sum(len(q.stage_trace) for q in self.queries),
+            "fused_queries": sum(q.fused_with > 1 for q in self.queries),
             "preemptions": sum(q.preemptions for q in self.queries),
             "spilled": sum(q.spilled for q in self.queries),
             "spill_backs": sum(q.spill_backs for q in self.queries),
@@ -175,14 +183,55 @@ class Simulation:
             for spec in specs
         ]
         self.coordinator = QueryCoordinator(
-            self.pools, policy=cfg.policy, cfg=cfg.sla
+            self.pools, policy=cfg.policy, cfg=cfg.sla,
+            cross_pool_fusion=cfg.fuse_queries and cfg.cross_pool_fusion,
+            fuse_max=cfg.fuse_max,
         )
         self.coordinator.wire_rehoming()
         self.vm = self.coordinator.vm
         self.cf = self.coordinator.cf
         self.service = ServiceLayer(
-            self.coordinator, cfg.sla, cfg.sla_enabled, fuse=cfg.fuse_queries
+            self.coordinator, cfg.sla, cfg.sla_enabled,
+            fuse=cfg.fuse_queries, fuse_max=cfg.fuse_max,
         )
+
+    def _poll_fast_forward(self, now: float, period: float,
+                           pool_bound: float, arrivals: list[Query],
+                           ai: int, tick_pools: list) -> float:
+        """Next poll time after a NO-OP poll: a poll that moved nothing
+        stays a no-op until something observable changes — the next
+        arrival, the relaxed head entering its deadline window, any
+        pool's next scheduled stage completion (`pool_bound`), or a due
+        autoscale action. Skip the chain to the first grid point that
+        could act, stepping by repeated addition so the grid times are
+        float-identical to the un-skipped 1-per-period chain."""
+        t_next = now + period
+        t_act = pool_bound
+        if ai < len(arrivals) and arrivals[ai].submit_time < t_act:
+            t_act = arrivals[ai].submit_time
+        rq = self.service.relaxed.q
+        if rq:
+            sla = self.cfg.sla
+            t_dl = (rq.head().submit_time
+                    + sla.relaxed_deadline_s * sla.deadline_slack)
+            if t_dl < t_act:
+                t_act = t_dl
+        for p in tick_pools:
+            ps = p._pending_scale
+            if ps:
+                t_tick = ps[0][0]
+            elif p.autoscale.trigger == "backlog":
+                t_tick = p._as_next_eval
+            else:
+                t_tick = math.inf  # run_queue: flips at own events only
+            if t_tick < t_act:
+                t_act = t_tick
+        if t_act is math.inf:
+            return t_next
+        limit = t_act - 1e-9
+        while t_next < limit:
+            t_next += period
+        return t_next
 
     def run(self, queries: Iterable[Query]) -> SimResult:
         cfg = self.cfg
@@ -190,9 +239,21 @@ class Simulation:
         finished: list[Query] = []
         counter = itertools.count()
         events: list[tuple[float, int, str]] = []
+        # the event loop runs millions of iterations on a 1M-query day:
+        # bind the hot names locally and peek pool heaps inline (the
+        # equivalent of next_event_time without two function calls per
+        # pool per event)
+        heappush, heappop = heapq.heappush, heapq.heappop
+        pools = self.pools
+        # pools with time-driven policy work between their own events
+        # (autoscale is fixed at construction time)
+        tick_pools = [p for p in pools if p.needs_tick]
+        submit, poll = self.service.submit, self.service.poll
+        poll_period = cfg.sla.poll_period_s
+        n_arrivals = len(arrivals)
 
         def push(t: float, kind: str) -> None:
-            heapq.heappush(events, (t, next(counter), kind))
+            heappush(events, (t, next(counter), kind))
 
         for q in arrivals:
             push(q.submit_time, "arrival")
@@ -206,61 +267,104 @@ class Simulation:
         stage_wake = math.inf
 
         while events:
-            now, _, kind = heapq.heappop(events)
+            now, _, kind = heappop(events)
+            moved = True
+            reschedule_poll = False
             if kind == "stage" and now >= stage_wake - 1e-12:
                 stage_wake = math.inf
             elif kind == "arrival":
-                while ai < len(arrivals) and arrivals[ai].submit_time <= now + 1e-9:
-                    self.service.submit(arrivals[ai], now)
+                moved = False
+                while ai < n_arrivals and arrivals[ai].submit_time <= now + 1e-9:
+                    submit(arrivals[ai], now)
                     ai += 1
+                    moved = True
             elif kind == "poll":
-                self.service.poll(now)
-                if (
-                    ai < len(arrivals)
-                    or self.service.pending
-                    or any(p.run_queue_len for p in self.pools)
-                ):
-                    push(now + cfg.sla.poll_period_s, "poll")
+                moved = poll(now) > 0
+                # keep polling only while something could still enter a
+                # pending queue: polls act on the SLA queues alone, so
+                # once they are empty and no arrival remains, no future
+                # poll can ever do anything (pools drain on stage wakes)
+                reschedule_poll = ai < n_arrivals or self.service.pending
+            if not moved:
+                # nothing entered the system this event: pool heaps are
+                # exactly as the previous event left them, so the wake
+                # already scheduled still stands. Only a pool with a due
+                # time-driven policy action (pending capacity change,
+                # backlog-trigger crossing) still needs its tick pass.
+                tick_hit = False
+                for p in tick_pools:
+                    if p.tick_due(now):
+                        tick_hit = True
+                        break
+                if not tick_hit:
+                    if reschedule_poll:
+                        push(self._poll_fast_forward(
+                            now, poll_period, stage_wake, arrivals, ai,
+                            tick_pools), "poll")
+                    continue
             # drain every stage completion due by now (exact per-stage
             # finish times are stamped inside the executors); a pool's
-            # advance may re-home a query onto an earlier pool (spill /
-            # spill-back), whose next stage lands in `nxts` below
-            for pool in self.pools:
-                finished.extend(pool.advance_to(now))
-            nxts = [
-                t
-                for t in (p.next_event_time() for p in self.pools)
-                if t is not None
-            ]
-            if nxts:
-                t = max(min(nxts), now)
+            # advance may re-home a query onto ANY pool (spill /
+            # spill-back), so the next-wake minimum is re-read from every
+            # heap after the advances. Pools with nothing due get the
+            # O(1) `tick` (apply a due capacity change, re-evaluate the
+            # decaying backlog trigger) — state that admits work only
+            # changes at a pool's own events, so skipping the full
+            # advance is behavior-preserving.
+            due = now + 1e-9
+            advanced = False
+            nxt = math.inf
+            for pool in pools:
+                h = pool._heap
+                while h:  # inline prune + peek
+                    e = h[0]
+                    if e[2].active and e[3] == e[2].epoch:
+                        break
+                    heappop(h)
+                if h and h[0][0] <= due:
+                    finished.extend(pool.advance_to(now))
+                    advanced = True
+                else:
+                    if pool.needs_tick:
+                        pool.tick(now)
+                        while h:  # a tick may admit (pending scale)
+                            e = h[0]
+                            if e[2].active and e[3] == e[2].epoch:
+                                break
+                            heappop(h)
+                    if h and h[0][0] < nxt:
+                        nxt = h[0][0]
+            if advanced:
+                # an advance may have re-homed work onto ANY pool (and
+                # changed its own heap): re-read every heap head
+                nxt = math.inf
+                for pool in pools:
+                    h = pool._heap
+                    while h:
+                        e = h[0]
+                        if e[2].active and e[3] == e[2].epoch:
+                            break
+                        heappop(h)
+                    if h and h[0][0] < nxt:
+                        nxt = h[0][0]
+            if nxt is not math.inf:
+                t = nxt if nxt > now else now
                 if t < stage_wake - 1e-12:
-                    push(t, "stage")
+                    heappush(events, (t, next(counter), "stage"))
                     stage_wake = t
+            if reschedule_poll:
+                if moved:
+                    push(now + poll_period, "poll")
+                else:
+                    push(self._poll_fast_forward(
+                        now, poll_period, stage_wake, arrivals, ai,
+                        tick_pools), "poll")
 
-        # unpack fused queries: members share times; cost splits by tokens
+        # unpack fused queries: members share times; cost splits by
+        # tokens with an exact-sum repair (scheduler.unpack_fused)
         expanded: list[Query] = []
         for q in finished:
-            members = getattr(q, "members", None)
-            if not members:
-                expanded.append(q)
-                continue
-            tot = sum(m.work.total_tokens for m in members)
-            for i, m in enumerate(members):
-                share = m.work.total_tokens / max(tot, 1)
-                m.start_time = q.start_time
-                m.finish_time = q.finish_time
-                m.cluster = q.cluster
-                m.state = q.state
-                m.chip_seconds = q.chip_seconds * share
-                m.cost = q.cost * share
-                if i == 0:  # the fused run's stage trace and engine
-                    m.stage_trace = q.stage_trace  # counters live on one
-                    m.retries = q.retries  # member so summaries stay exact
-                    m.preemptions = q.preemptions
-                    m.spilled = q.spilled
-                    m.spill_backs = q.spill_backs
-                expanded.append(m)
+            expanded.extend(unpack_fused(q))
         return SimResult(expanded, cfg)
 
 

@@ -263,7 +263,7 @@ def test_boe_fusion_never_mixes_train_and_serve():
     boe.enqueue(serve)
     boe.enqueue(train)
     (head,) = boe.poll(0.0)
-    assert head is serve and not hasattr(head, "members")
+    assert head is serve and head.members is None
 
 
 def test_boe_fusion_requires_matching_output_tokens():

@@ -1,0 +1,365 @@
+"""Multi-query fusion: the indexed pending queues, cross-pool
+placement-time fusion, and the exact-sum billing split (docs/fusion.md).
+
+These tests run without hypothesis — the randomized invariant sweeps
+live in tests/test_properties.py; here each mechanism is pinned down
+deterministically."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultModel,
+    Policy,
+    PoolSpec,
+    Query,
+    QueryWork,
+    ServiceLevel,
+    SimConfig,
+    Simulation,
+    SLAConfig,
+    run_sim,
+)
+from repro.core.cost_model import CostModel
+from repro.core.clusters import CostEfficientCluster, HighElasticCluster
+from repro.core.scheduler import (
+    CrossPoolFusionIndex,
+    PendingQueue,
+    QueryCoordinator,
+    fuse_queries,
+    fusion_key,
+    pop_fused,
+    unpack_fused,
+)
+
+
+def _q(arch="qwen2-0.5b", prompt=200_000, out=16, sla=ServiceLevel.IMMEDIATE,
+       t=0.0, batch=1):
+    return Query(
+        work=QueryWork(arch=arch, kind="serve", batch=batch,
+                       prompt_tokens=prompt, output_tokens=out),
+        sla=sla, submit_time=t,
+    )
+
+
+# ---------------------------------------------------------------------------
+# PendingQueue: the indexed pending queue behind pop_fused
+# ---------------------------------------------------------------------------
+
+def test_pending_queue_is_fifo_and_fuses_in_bucket_order():
+    pq = PendingQueue()
+    a = _q(out=16, t=0)
+    b = _q(out=64, t=1)  # different bucket
+    c = _q(out=16, t=2)
+    d = _q(out=16, t=3)
+    for q in (a, b, c, d):
+        pq.append(q)
+    assert len(pq) == 4 and pq.head() is a
+    head = pq.popleft()
+    assert head is a
+    # the head's group comes straight off its bucket, FIFO, head excluded
+    assert pq.take_fusable(head, 8) == [c, d]
+    assert len(pq) == 1 and pq.head() is b  # stale copies skipped
+    assert pq.popleft() is b and len(pq) == 0
+
+
+def test_pop_fused_matches_naive_scan_semantics():
+    """The indexed pop must select exactly what the old O(n) scan
+    selected: the head plus the first fuse_max-1 compatible queries in
+    queue order."""
+    rng = np.random.default_rng(7)
+    qs = [
+        _q(out=int(rng.choice([16, 64])), prompt=int(rng.choice([1, 2])) * 100_000,
+           t=float(i))
+        for i in range(40)
+    ]
+    pq = PendingQueue()
+    naive = list(qs)
+    for q in qs:
+        pq.append(q)
+    while naive:
+        expect_head = naive.pop(0)
+        expect_same = [q for q in naive
+                       if fusion_key(q.work) == fusion_key(expect_head.work)][:3]
+        got = pop_fused(pq, 0.0, True, 4)
+        if expect_same:
+            assert got.members == [expect_head] + expect_same
+        else:
+            assert got is expect_head
+        for m in expect_same:
+            naive.remove(m)
+    assert len(pq) == 0
+
+
+def test_pending_queue_train_queries_never_indexed():
+    pq = PendingQueue()
+    t1 = Query(work=QueryWork(arch="qwen2-0.5b", kind="train",
+                              train_steps=2, prompt_tokens=1, output_tokens=0),
+               sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+    s1 = _q()
+    pq.append(t1)
+    pq.append(s1)
+    head = pop_fused(pq, 0.0, True, 8)
+    assert head is t1 and head.members is None
+
+
+# ---------------------------------------------------------------------------
+# exact-sum billing split
+# ---------------------------------------------------------------------------
+
+def test_unpack_split_sums_exactly_and_shares_by_tokens():
+    members = [_q(batch=1, t=0), _q(batch=3, t=1), _q(batch=2, t=2)]
+    fused = fuse_queries(members, now=5.0)
+    fused.start_time, fused.finish_time = 10.0, 20.0
+    fused.cluster, fused.state = "vm", "done"
+    fused.chip_seconds = 123.456789012345
+    fused.cost = 0.9876543210987654
+    out = unpack_fused(fused)
+    assert out == members
+    # bit-exact conservation — no float residue anywhere, and in
+    # particular none silently parked on member 0
+    assert sum(m.cost for m in out) == fused.cost
+    assert sum(m.chip_seconds for m in out) == fused.chip_seconds
+    # split follows token shares (batch-weighted) to float accuracy
+    tot = sum(m.work.total_tokens for m in members)
+    for m in out[:-1]:
+        assert m.cost == pytest.approx(
+            fused.cost * m.work.total_tokens / tot, rel=1e-12
+        )
+        assert m.fused_with == 3
+        assert (m.start_time, m.finish_time) == (10.0, 20.0)
+    # the fused trace/counters live on member 0 only
+    assert out[0].stage_trace is fused.stage_trace
+
+
+def test_unpack_split_exact_on_adversarial_eighths():
+    """8 equal members: the 0.125 shares reproduce the rounding residue
+    that used to leak (sum != total by 1 ulp) — the repair must close it
+    for any total."""
+    rng = np.random.default_rng(3)
+    for _ in range(200):
+        members = [_q(t=float(i)) for i in range(8)]
+        fused = fuse_queries(members, now=0.0)
+        fused.chip_seconds = float(rng.uniform(1e-6, 1e6))
+        fused.cost = float(rng.uniform(1e-9, 1e3))
+        fused.state = "done"
+        out = unpack_fused(fused)
+        assert sum(m.cost for m in out) == fused.cost
+        assert sum(m.chip_seconds for m in out) == fused.chip_seconds
+
+
+# ---------------------------------------------------------------------------
+# cross-pool placement-time fusion
+# ---------------------------------------------------------------------------
+
+def _two_pool_coordinator(cross=True):
+    cm = CostModel(use_calibration=False)
+    a = CostEfficientCluster(chips=16, mode="sos", sos_slice_chips=16,
+                             cost_model=cm)
+    a.name = "a"
+    b = CostEfficientCluster(chips=16, mode="sos", sos_slice_chips=16,
+                             cost_model=CostModel(use_calibration=False))
+    b.name = "b"
+    coord = QueryCoordinator([a, b], policy=Policy.FORCE, cfg=SLAConfig(),
+                             cross_pool_fusion=cross)
+    return coord, a, b
+
+
+def test_cross_pool_fusion_merges_waiters_from_other_pools():
+    coord, a, b = _two_pool_coordinator()
+    # saturate pool a so submissions to it WAIT; pool b stays free —
+    # an arriving IMMEDIATE only fuses when a slice is free for the
+    # batch to start on
+    a.submit(_q(prompt=900_000), 0.0)
+    w1, w2 = _q(t=1.0), _q(t=2.0)
+    a.submit(w1, 1.0)
+    a.submit(w2, 2.0)
+    assert w1 in a.waiting and w2 in a.waiting
+    # a compatible fresh query routes: the waiters are pulled out of
+    # the busy pool and the merged batch starts on the free one
+    fresh = _q(t=3.0)
+    pool_name = coord.route(fresh, 3.0)
+    assert pool_name == "b"
+    merged = [r.query for r in b.running if r.query.members is not None]
+    assert len(merged) == 1
+    assert merged[0].members == [fresh, w1, w2]
+    assert w1 not in a.waiting and w2 not in a.waiting
+    assert merged[0].work.batch == 3
+
+
+def test_cross_pool_fusion_skips_relaxed_level():
+    """RELAXED work is batched by its pending queue before placement —
+    the placement-time index must leave it alone."""
+    coord, a, b = _two_pool_coordinator()
+    a.submit(_q(prompt=900_000), 0.0)
+    w = _q(t=1.0, sla=ServiceLevel.RELAXED)
+    w.effective_sla = ServiceLevel.RELAXED
+    a.submit(w, 1.0)
+    fresh = _q(t=2.0, sla=ServiceLevel.RELAXED)
+    fresh.effective_sla = ServiceLevel.RELAXED
+    coord.route(fresh, 2.0)
+    assert fresh.members is None and w in a.waiting
+
+
+def test_cross_pool_fusion_respects_sla_and_key():
+    coord, a, b = _two_pool_coordinator()
+    a.submit(_q(prompt=900_000), 0.0)  # saturate
+    boe = _q(t=1.0, sla=ServiceLevel.BEST_EFFORT)
+    other_shape = _q(t=1.0, out=64)
+    a.submit(boe, 1.0)
+    a.submit(other_shape, 1.0)
+    fresh = _q(t=2.0)
+    coord.route(fresh, 2.0)
+    # neither the BoE waiter (different level) nor the 64-token waiter
+    # (different fusion key) may ride the IMMEDIATE head
+    assert fresh.members is None
+    assert boe in a.waiting and other_shape in a.waiting
+
+
+def test_withdraw_keeps_backlog_and_index_consistent():
+    coord, a, b = _two_pool_coordinator()
+    a.submit(_q(prompt=900_000), 0.0)
+    w = _q(t=1.0)
+    a.submit(w, 1.0)
+    before = a.predicted_backlog_s(1.0)
+    assert a.withdraw(w)
+    after = a.predicted_backlog_s(1.0)
+    assert after < before
+    a.check_backlog_invariant(1.0)  # incremental == scan after withdraw
+    assert not a.withdraw(w)  # second claim must fail
+
+
+def test_preempted_queries_never_fuse():
+    """A preempted query (stage_cursor > 0) must not enter the fusion
+    index: a merged query restarts from stage 0, which would replay the
+    preempted query's completed stages."""
+    index = CrossPoolFusionIndex()
+    coord, a, b = _two_pool_coordinator()
+    q = _q()
+    q.stage_cursor = 2
+    q.state = "preempted"
+    index.add(a, q)
+    assert index.candidates(_q(), 8) == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the 3-pool day
+# ---------------------------------------------------------------------------
+
+def _day(fuse, cross, seed=0, n=60):
+    from repro.core.workload import generate, scaled_patterns
+
+    qs = generate(horizon_s=3600.0, seed=seed,
+                  patterns=scaled_patterns(n / 911))
+    cfg = SimConfig(
+        policy=Policy.FORCE, use_calibration=False, seed=seed,
+        fuse_queries=fuse, cross_pool_fusion=cross,
+        sla=SLAConfig(vm_overload_threshold=4, preempt_best_effort=True,
+                      spill_enabled=True),
+        pools=[
+            PoolSpec(name="vm", kind="reserved", chips=16, mode="sos",
+                     slice_chips=16),
+            PoolSpec(name="spot", kind="reserved", chips=32, mode="sos",
+                     slice_chips=16, speed_factor=0.25,
+                     price_multiplier=0.15),
+            PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0,
+                     price_multiplier=10.0),
+        ],
+    )
+    return Simulation(cfg).run(qs)
+
+
+def test_cross_pool_fusion_day_conserves_and_everyone_finishes():
+    res = _day(fuse=True, cross=True)
+    assert all(q.state == "done" for q in res.queries)
+    s = res.summary()
+    assert s["finished"] == s["n"]
+    # per-member bills sum exactly to the fused runs' totals: total
+    # billed == total traced (traces shared by members, dedupe by id)
+    traces = {id(q.stage_trace): q.stage_trace
+              for q in res.queries if q.stage_trace}
+    assert sum(q.cost for q in res.queries) == pytest.approx(
+        sum(e.cost for tr in traces.values() for e in tr), rel=1e-9
+    )
+
+
+def test_cross_pool_fusion_never_costs_more_than_within():
+    """On a contended day, placement-time fusion across pools can only
+    merge MORE compatible work into shared batches — billed cost must
+    not exceed the within-pool-fusion run's."""
+    within = _day(fuse=True, cross=False, n=400)
+    cross = _day(fuse=True, cross=True, n=400)
+    assert cross.summary()["fused_queries"] >= within.summary()["fused_queries"]
+    assert cross.total_cost() <= within.total_cost() + 1e-9
+
+
+def test_fuse_off_day_identical_with_and_without_cross_flag():
+    a = _day(fuse=False, cross=False, n=200)
+    b = _day(fuse=False, cross=True, n=200)
+    sig = lambda res: sorted(  # noqa: E731
+        (q.submit_time, q.cost, q.chip_seconds, q.finish_time, q.cluster)
+        for q in res.queries
+    )
+    assert sig(a) == sig(b)
+
+
+def test_unpack_split_exact_on_mixed_batches():
+    """Members with wildly different token counts (mixed batches) hit
+    the parity-trap corner of the exact-sum repair: a dominant last
+    member puts the residue in the total's own binade, where a bad
+    prefix alignment makes every candidate land on a rounding tie. The
+    repair must escape it for any total."""
+    rng = np.random.default_rng(11)
+    for _ in range(500):
+        n = int(rng.integers(2, 9))
+        members = [
+            _q(batch=int(rng.integers(1, 4097)),
+               prompt=int(rng.integers(100, 5000)), out=32, t=0.0)
+            for _ in range(n)
+        ]
+        fused = fuse_queries(members, now=0.0)
+        fused.chip_seconds = float(rng.uniform(1e-6, 1e7))
+        fused.cost = float(rng.uniform(1e-9, 1e5))
+        fused.state = "done"
+        out = unpack_fused(fused)
+        assert sum(m.cost for m in out) == fused.cost
+        assert sum(m.chip_seconds for m in out) == fused.chip_seconds
+
+
+def test_pending_queue_no_bookkeeping_growth_when_fuse_off():
+    """With fusion off (the default), popped queries must leave no
+    bucket or stale entries behind — a long-lived engine would
+    otherwise leak one strong Query reference per drained query."""
+    pq = PendingQueue(fuse=False)
+    for i in range(500):
+        pq.append(_q(t=float(i)))
+    for _ in range(500):
+        pop_fused(pq, 0.0, False, 8)
+    assert len(pq) == 0
+    assert not pq._stale and not pq._buckets
+
+
+def test_withdraw_clears_stale_preempt_flag():
+    """Fusion withdrawing an IMMEDIATE waiter must take its preemption
+    request with it — otherwise the flagged BEST_EFFORT run is bumped
+    at its next boundary with nobody waiting for the slice."""
+    vm = CostEfficientCluster(chips=16, mode="sos", sos_slice_chips=16,
+                              cost_model=CostModel(use_calibration=False),
+                              preempt_best_effort=True)
+    boe = _q(prompt=900_000, sla=ServiceLevel.BEST_EFFORT)
+    vm.submit(boe, 0.0)  # runs
+    imm = _q(t=1.0)
+    vm.submit(imm, 1.0)  # waits -> flags the running BoE query
+    (run,) = vm.running
+    assert run.preempt_requested
+    assert vm.withdraw(imm)
+    assert not run.preempt_requested and not vm._flagged
+
+
+def test_fifo_drained_pools_leave_no_lane_entries():
+    """Elastic (and POS) pools drain `waiting` strictly FIFO and never
+    call pop_best — the lane bookkeeping must still be reclaimed, not
+    grow one dead cell per query forever."""
+    cf = HighElasticCluster(cost_model=CostModel(use_calibration=False))
+    for i in range(2000):
+        cf.submit(_q(t=float(i), sla=ServiceLevel.RELAXED), float(i))
+    assert sum(len(lane) for lane in cf.waiting._lanes) == 0

@@ -421,3 +421,117 @@ def test_live_price_menu_quotes_from_registry():
         assert est["cf"]["cost"] > est["vm"]["cost"]
     finally:
         eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# satellite: a saturated live elastic pool quotes its drain, not just
+# startup — and live pools share the cross-pool fusion index
+# ---------------------------------------------------------------------------
+
+def test_live_elastic_quote_includes_drain_when_saturated():
+    """The live elastic pool is bounded at `chips` workers (unlike the
+    sim's unbounded burst tier): once every worker is busy, a new task
+    waits for the backlog to drain, so the quote must be startup_s +
+    predicted drain at current occupancy — not startup_s alone."""
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="cf", kind="elastic", chips=2, startup_s=0.05,
+                        price_multiplier=10.0)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+    ))
+    try:
+        eng._stop.set()  # freeze execution: quote from injected state
+        pool = eng.pools[0]
+        probe = Query(work=eng.live_work(QueryWork()),
+                      sla=ServiceLevel.IMMEDIATE, submit_time=0.0)
+        assert pool._queue_delay_estimate(probe, 0.0) == pytest.approx(
+            pool.startup_s
+        )
+        # saturate: as many committed placements as workers
+        occupants = [
+            Query(work=eng.live_work(QueryWork()),
+                  sla=ServiceLevel.IMMEDIATE, submit_time=0.0)
+            for _ in range(pool.workers)
+        ]
+        with pool._mu:
+            for q in occupants:
+                pool.running[q.qid] = (q, object())
+        drain = pool.predicted_backlog_s(0.0) / pool.workers
+        assert drain > 0.0
+        est = pool._queue_delay_estimate(probe, 0.0)
+        assert est == pytest.approx(pool.startup_s + drain)
+        # the full quote reflects it too
+        assert pool.quote(probe, 0.0)["latency_s"] == pytest.approx(
+            pool.startup_s + drain
+            + pool.cost_model.plan(probe.work, 1).exec_time
+        )
+    finally:
+        eng.shutdown()
+
+
+def test_live_pools_share_cross_pool_fusion_index():
+    """Two live reserved pools + cross_pool_fusion: waiters queued on
+    DIFFERENT pools merge into one batched query at placement time,
+    through the same CrossPoolFusionIndex the simulator uses. Workers
+    are frozen so the fusion decision is deterministic."""
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="a", kind="reserved", chips=1),
+               PoolSpec(name="b", kind="reserved", chips=1)],
+        fuse_queries=True, cross_pool_fusion=True,
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+    ))
+    try:
+        eng._stop.set()  # freeze workers: waiters stay queued
+        a, b = eng.pools
+        assert a.wait_observer is eng.coordinator.fusion
+        w1 = Query(work=eng.live_work(QueryWork()),
+                   sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+        w2 = Query(work=eng.live_work(QueryWork()),
+                   sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+        a.submit(w1, 0.0)
+        b.submit(w2, 0.0)
+        fresh = Query(work=eng.live_work(QueryWork()),
+                      sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+        fresh.effective_sla = ServiceLevel.BEST_EFFORT
+        eng.coordinator.route(fresh, 0.0)
+        merged = [q for q in list(a.waiting) + list(b.waiting)
+                  if q.members is not None]
+        assert len(merged) == 1
+        assert sorted(m.qid for m in merged[0].members) == sorted(
+            [fresh.qid, w1.qid, w2.qid]
+        )
+        assert w1 not in a.waiting and w2 not in b.waiting
+        # a second withdraw of an already-claimed mate must fail cleanly
+        assert not a.withdraw(w1)
+    finally:
+        eng.shutdown()
+
+
+def test_live_fused_execution_unpacks_with_exact_split():
+    """End-to-end: a fused batch executes as ONE jitted run and drains
+    as its members, with the billed split summing bit-exactly."""
+    from repro.core.scheduler import fuse_queries
+
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=1)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+    ))
+    try:
+        members = [
+            Query(work=eng.live_work(QueryWork()),
+                  sla=ServiceLevel.IMMEDIATE, submit_time=0.0)
+            for _ in range(3)
+        ]
+        fused = fuse_queries(members, now=0.0)
+        fused.work = eng.live_work(fused.work)
+        eng.submit(fused)
+        out = eng.drain(3, timeout=60.0)
+        assert len(out) == 3 and all(q.state == "done" for q in out)
+        assert {q.qid for q in out} == {m.qid for m in members}
+        assert sum(q.cost for q in out) == fused.cost
+        assert sum(q.chip_seconds for q in out) == fused.chip_seconds
+        assert all(q.fused_with == 3 for q in out)
+    finally:
+        eng.shutdown()

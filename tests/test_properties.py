@@ -173,14 +173,16 @@ def _random_stream(seed: int, n: int) -> list[Query]:
 
 
 def _run_heap_checked(seed: int, n: int, spill_back: bool,
-                      hot_swap: bool = False):
+                      hot_swap: bool = False, queries=None, **sim_kw):
     """A contended SOS sim with preemption + spill (+ spill-back) + stage
-    faults, re-checking the heap discipline after EVERY executor advance:
-    every running stage has exactly one valid heap entry, and no valid
-    entry refers to a retired run. With ``hot_swap``, a calibration
-    table is swapped into EVERY pool's cost model MID-RUN (each pool
-    after its own 10th advance) — the invariants must survive the live
-    model update."""
+    faults, re-checking after EVERY executor advance: (a) the heap
+    discipline — every running stage has exactly one valid heap entry,
+    and no valid entry refers to a retired run — and (b) the backlog
+    equivalence — the O(1) incremental ``predicted_backlog_s`` counter
+    matches the full O(running+waiting) recompute scan. With
+    ``hot_swap``, a calibration table is swapped into EVERY pool's cost
+    model MID-RUN (each pool after its own 10th advance) — the
+    invariants must survive the live model update."""
     from repro.core.calibration import CalibrationTable
 
     orig = ClusterExecutor.advance_to
@@ -189,6 +191,7 @@ def _run_heap_checked(seed: int, n: int, spill_back: bool,
     def checked(self, now):
         out = orig(self, now)
         self.check_heap_invariant()
+        self.check_backlog_invariant(now)
         advances[id(self)] = advances.get(id(self), 0) + 1
         if hot_swap and advances[id(self)] == 10:
             # mid-run hot swap: later stages of RUNNING queries re-plan
@@ -201,7 +204,7 @@ def _run_heap_checked(seed: int, n: int, spill_back: bool,
     ClusterExecutor.advance_to = checked
     try:
         return run_sim(
-            _random_stream(seed, n),
+            queries if queries is not None else _random_stream(seed, n),
             vm_mode="sos", vm_chips=32, sos_slice_chips=16,
             use_calibration=False, seed=seed,
             fault=FaultModel(failure_prob=0.1, straggler_prob=0.1),
@@ -210,6 +213,7 @@ def _run_heap_checked(seed: int, n: int, spill_back: bool,
                 spill_back_enabled=spill_back,
                 spill_back_low_backlog_s=30.0, vm_overload_threshold=3,
             ),
+            **sim_kw,
         )
     finally:
         ClusterExecutor.advance_to = orig
@@ -258,6 +262,116 @@ def test_billed_chip_seconds_are_conserved(seed, n, spill_back, hot_swap):
         assert q.cost == pytest.approx(sum(e.cost for e in q.stage_trace))
         # a retried stage bills MORE than its clean run, never less
         assert q.chip_seconds > 0 and q.cost > 0
+
+
+# ---------------------------------------------------------------------------
+# fusion invariants (within-pool AND cross-pool placement-time fusion)
+# ---------------------------------------------------------------------------
+
+def _fusable_stream(seed: int, n: int) -> list[Query]:
+    """A stream drawn from FEW work shapes, so fusion groups actually
+    form (duplicate (arch, kind, prompt, output) keys are the fusion
+    opportunity)."""
+    rng = np.random.default_rng(seed)
+    shapes = [
+        QueryWork(arch="paper-default", prompt_tokens=200_000,
+                  output_tokens=32),
+        QueryWork(arch="paper-default", prompt_tokens=800_000,
+                  output_tokens=64),
+        QueryWork(arch="qwen2-0.5b", prompt_tokens=200_000,
+                  output_tokens=32),
+    ]
+    return [
+        Query(
+            work=shapes[int(rng.integers(0, len(shapes)))],
+            sla=ServiceLevel(int(rng.integers(0, 3))),
+            submit_time=float(rng.uniform(0, 300)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _check_fusion_invariants(res, n: int) -> None:
+    """Conservation + trace integrity across fusion/unpack:
+    every submitted query comes back exactly once; chip-seconds and
+    costs are conserved — the sum over queries equals the sum over the
+    (deduplicated) stage traces bit-for-bit up to the exact-sum split —
+    and each executed trace is overlap-free with contiguous indices."""
+    assert len(res.queries) == n
+    assert len({q.qid for q in res.queries}) == n
+    for q in res.queries:
+        assert q.finish_time is not None and q.state == "done"
+        assert q.cost > 0 and q.chip_seconds > 0
+    # stage traces are SHARED by fused members (member 0 carries the
+    # fused run's trace): deduplicate by identity before summing
+    seen_traces: dict[int, list] = {}
+    for q in res.queries:
+        if q.stage_trace:
+            seen_traces[id(q.stage_trace)] = q.stage_trace
+    trace_cs = sum(
+        e.chip_seconds for tr in seen_traces.values() for e in tr
+    )
+    trace_cost = sum(e.cost for tr in seen_traces.values() for e in tr)
+    assert sum(q.chip_seconds for q in res.queries) == pytest.approx(
+        trace_cs, rel=1e-9
+    )
+    assert sum(q.cost for q in res.queries) == pytest.approx(
+        trace_cost, rel=1e-9
+    )
+    for tr in seen_traces.values():
+        assert [e.index for e in tr] == list(range(len(tr)))
+        for a, b in zip(tr, tr[1:]):
+            assert b.start >= a.finish - 1e-9  # no overlap across hops
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(8, 30),
+    cross=st.booleans(),
+    spill_back=st.booleans(),
+)
+def test_fusion_conserves_chip_seconds_under_preempt_spill_retry(
+    seed, n, cross, spill_back
+):
+    """Fusion — including cross-pool placement-time fusion — preserves
+    chip-second/cost conservation and gap/overlap-free stage traces
+    under arbitrary preempt/spill/retry, with the heap AND incremental-
+    backlog invariants re-checked after every advance."""
+    res = _run_heap_checked(
+        seed, n, spill_back, queries=_fusable_stream(seed, n),
+        fuse_queries=True, cross_pool_fusion=cross,
+    )
+    _check_fusion_invariants(res, n)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 25))
+def test_fusion_off_is_invariant_to_cross_pool_flag(seed, n):
+    """Degeneracy: with fuse_queries=False the cross_pool_fusion flag —
+    and the whole fusion index machinery — must be inert: per-query
+    results are identical field-for-field."""
+    def go(cross):
+        qs = _fusable_stream(seed, n)
+        return run_sim(
+            qs, vm_mode="sos", vm_chips=32, sos_slice_chips=16,
+            use_calibration=False, seed=seed,
+            fault=FaultModel(failure_prob=0.1, straggler_prob=0.1),
+            cross_pool_fusion=cross,
+            sla=SLAConfig(preempt_best_effort=True, spill_enabled=True,
+                          vm_overload_threshold=3),
+        )
+
+    a, b = go(False), go(True)
+    sig_a = sorted(
+        (q.submit_time, q.cost, q.chip_seconds, q.finish_time, q.cluster)
+        for q in a.queries
+    )
+    sig_b = sorted(
+        (q.submit_time, q.cost, q.chip_seconds, q.finish_time, q.cluster)
+        for q in b.queries
+    )
+    assert sig_a == sig_b
 
 
 # ---------------------------------------------------------------------------
