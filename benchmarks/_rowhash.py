@@ -1,0 +1,97 @@
+"""Per-query bit-identity fingerprint of the four classic 50k rows.
+
+Runs each classic scale.py config and hashes every query's exact result
+floats (repr round-trips IEEE doubles losslessly), so two commits can be
+compared for bit-identical per-query results without storing 200k rows.
+
+Usage: PYTHONPATH=src python benchmarks/_rowhash.py out.json [--factor 55]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks.scale import (  # noqa: E402
+    DAY_S,
+    SEED_DAY_QUERIES,
+    _pools3_autoscale,
+    _pools3_specs,
+)
+from repro.core import Policy, SimConfig, Simulation, SLAConfig  # noqa: E402
+from repro.core.workload import generate, scaled_patterns  # noqa: E402
+
+
+def _row_cfg(name: str) -> SimConfig:
+    engine_on = name == "engine_on"
+    if name in ("engine_off", "engine_on"):
+        return SimConfig(
+            policy=Policy.AUTO, vm_mode="sos", vm_chips=64,
+            sos_slice_chips=16, use_calibration=False, seed=0,
+            sla=SLAConfig(vm_overload_threshold=12,
+                          preempt_best_effort=engine_on,
+                          spill_enabled=engine_on),
+        )
+    backlog = name == "pools3_backlog"
+    return SimConfig(
+        policy=Policy.FORCE, use_calibration=False, seed=0,
+        sla=SLAConfig(vm_overload_threshold=12, preempt_best_effort=True,
+                      spill_enabled=True, spill_back_enabled=backlog,
+                      spill_back_low_backlog_s=5.0),
+        pools=_pools3_specs(_pools3_autoscale(backlog)),
+    )
+
+
+def fingerprint(name: str, factor: float) -> dict:
+    qs = generate(horizon_s=DAY_S, seed=0, patterns=scaled_patterns(factor))
+    n = len(qs)
+    t0 = time.perf_counter()
+    res = Simulation(_row_cfg(name)).run(qs)
+    wall = time.perf_counter() - t0
+    h = hashlib.sha256()
+    total_cost = 0.0
+    stages = 0
+    for q in sorted(res.queries, key=lambda q: q.qid):
+        h.update(
+            f"{q.qid}|{q.cost!r}|{q.chip_seconds!r}|{q.finish_time!r}|"
+            f"{q.start_time!r}|{q.cluster}|{len(q.stage_trace)}|"
+            f"{q.retries}|{q.preemptions}|{q.spilled}|"
+            f"{q.spill_backs}\n".encode()
+        )
+        total_cost += q.cost
+        stages += len(q.stage_trace)
+    # finished-order hash: the ORDER queries complete in is behavior too
+    ho = hashlib.sha256()
+    for q in res.queries:
+        ho.update(f"{q.qid},".encode())
+    return {
+        "n": n,
+        "sha256": h.hexdigest(),
+        "order_sha256": ho.hexdigest(),
+        "total_cost": round(total_cost, 4),
+        "stages": stages,
+        "wall_s": round(wall, 2),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out")
+    ap.add_argument("--factor", type=float, default=55.0)
+    ap.add_argument("--rows", default="engine_off,engine_on,"
+                    "pools3_runqueue,pools3_backlog")
+    args = ap.parse_args()
+    out = {}
+    for name in args.rows.split(","):
+        out[name] = fingerprint(name, args.factor)
+        print(f"{name}: {json.dumps(out[name])}", flush=True)
+    Path(args.out).write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+
+
+if __name__ == "__main__":
+    main()

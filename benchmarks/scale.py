@@ -181,7 +181,7 @@ def _timed_run(sim: Simulation, qs):
 
 
 def run_day(n_target: int, engine_on: bool, seed: int = 0,
-            repeats: int = 1) -> dict:
+            repeats: int = 1, profile: bool = False) -> dict:
     """PR-1 baseline: the two-pool vm/cf system, stage policies on/off.
     `repeats` re-runs the (deterministic) day and keeps the best wall —
     per-query results are identical across repeats, so only the timing
@@ -204,23 +204,44 @@ def run_day(n_target: int, engine_on: bool, seed: int = 0,
             spill_enabled=engine_on,
         ),
     )
-    sim, res, wall, n = _best_of(cfg, qs_factory, repeats)
-    return _report(sim, res, wall, n)
+    return _finish_row(_best_of(cfg, qs_factory, repeats), profile)
 
 
 def _best_of(cfg: SimConfig, qs_factory, repeats: int):
     """Run the (deterministic) day `repeats` times on freshly generated
     queries — Query objects are mutated by a run — keeping the best
     wall. Per-query results are identical across repeats, so this only
-    filters shared-machine timing noise out of the comparison."""
+    filters shared-machine timing noise out of the comparison. Arrival
+    generation runs OUTSIDE the gc-paused timed region (the wall numbers
+    measure the engine only) and its own wall is kept as `gen_s`."""
     best = None
     for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
         qs = qs_factory()
+        gen_s = time.perf_counter() - t0
         sim = Simulation(cfg)
         res, wall = _timed_run(sim, qs)
         if best is None or wall < best[2]:
-            best = (sim, res, wall, len(qs))
+            best = (sim, res, wall, len(qs), gen_s)
     return best
+
+
+def _finish_row(best, profile: bool) -> dict:
+    """Reduce one day's best run to its bench row. `gen_s` (arrival
+    generation, outside the timed region) is always recorded; --profile
+    adds the per-phase wall breakdown future perf PRs diff against."""
+    sim, res, wall, n, gen_s = best
+    t0 = time.perf_counter()
+    row = _report(sim, res, wall, n)
+    accounting_s = time.perf_counter() - t0
+    row["gen_s"] = round(gen_s, 3)
+    if profile:
+        row["profile"] = {
+            "arrival_gen_s": round(gen_s, 3),
+            "advance_loop_s": round(wall, 3),
+            "accounting_s": round(accounting_s, 3),
+        }
+    return row
 
 
 def _pools3_specs(autoscale: AutoscaleConfig) -> list[PoolSpec]:
@@ -261,6 +282,7 @@ def run_day_pools3(
     fuse: bool = False,
     cross_pool_fusion: bool = False,
     repeats: int = 1,
+    profile: bool = False,
 ) -> dict:
     """The 3-pool registry. backlog_policy=False reproduces PR-1's
     policies on it (run-queue autoscale trigger, one-way spill);
@@ -288,8 +310,7 @@ def run_day_pools3(
         ),
         pools=_pools3_specs(_pools3_autoscale(backlog_policy)),
     )
-    sim, res, wall, n = _best_of(cfg, qs_factory, repeats)
-    return _report(sim, res, wall, n)
+    return _finish_row(_best_of(cfg, qs_factory, repeats), profile)
 
 
 def main() -> None:
@@ -312,19 +333,24 @@ def main() -> None:
                     help="re-run each classic row N times, keep the best "
                     "wall (results are deterministic; filters machine "
                     "noise out of the speedup comparison)")
+    ap.add_argument("--profile", action="store_true",
+                    help="record a per-phase wall breakdown (arrival gen "
+                    "/ advance loop / accounting) in every row")
     args = ap.parse_args()
     factor = args.factor / 10 if args.fast else args.factor
     n_target = int(SEED_DAY_QUERIES * factor)
 
     rows = {}
     for name, on in (("engine_off", False), ("engine_on", True)):
-        rows[name] = run_day(n_target, on, repeats=args.repeats)
+        rows[name] = run_day(n_target, on, repeats=args.repeats,
+                             profile=args.profile)
         print(f"{name}: {json.dumps(rows[name])}")
     for name, backlog in (
         ("pools3_runqueue", False),
         ("pools3_backlog", True),
     ):
-        rows[name] = run_day_pools3(n_target, backlog, repeats=args.repeats)
+        rows[name] = run_day_pools3(n_target, backlog, repeats=args.repeats,
+                                    profile=args.profile)
         print(f"{name}: {json.dumps(rows[name])}")
 
     # fusion rows: within-pool (pending-queue) fusion vs + cross-pool
@@ -356,12 +382,14 @@ def main() -> None:
         # the scaling evidence point: the same no-fusion pools3_backlog
         # config at 4x scale — the pre-overhaul code never finished this
         # day (PRE_PR_SCALING); the O(1) engine treats it as routine
-        rows["pools3_200k"] = run_day_pools3(200_000, True)
+        rows["pools3_200k"] = run_day_pools3(200_000, True,
+                                             profile=args.profile)
         print(f"pools3_200k: {json.dumps(rows['pools3_200k'])}")
         # the tentpole row: a 1M-query day (20x) through the same 3-pool
         # registry with cross-pool fusion on
         rows["pools3_1m"] = run_day_pools3(
-            1_000_000, True, fuse=True, cross_pool_fusion=True
+            1_000_000, True, fuse=True, cross_pool_fusion=True,
+            profile=args.profile,
         )
         print(f"pools3_1m: {json.dumps(rows['pools3_1m'])}")
 
@@ -447,9 +475,19 @@ def main() -> None:
         derived["pre_pr_scaling"] = PRE_PR_SCALING
     print(f"derived: {json.dumps(derived)}")
 
-    out = {"rows": rows, "derived": derived,
-           "n_target": n_target, "factor": factor}
-    Path(args.out).write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    # merge-preserving write: keys other runs own (the sweep harness's
+    # `sweep` section, the cross-PR `trajectory` list) survive a scale
+    # re-run — each tool updates only its own sections of the one file
+    out_path = Path(args.out)
+    out = {}
+    if out_path.exists():
+        try:
+            out = json.loads(out_path.read_text())
+        except (json.JSONDecodeError, OSError):
+            out = {}
+    out.update({"rows": rows, "derived": derived,
+                "n_target": n_target, "factor": factor})
+    out_path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
     print(f"wrote {args.out}")
 
     if args.budget_s is not None:

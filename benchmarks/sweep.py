@@ -1,0 +1,369 @@
+"""Process-sharded sweep harness: N (scenario, seed, policy) cells in
+parallel workers, merged into one BENCH_scale.json.
+
+Reproducing the paper's headline economics (−65.5% resource cost on CAB
+days without pending-SLA violations) takes sweeps over policies × seeds
+× scenarios, not single days — and every ROADMAP scale item is gated on
+sweep throughput. This harness shards the grid across worker PROCESSES
+(the simulator is pure Python + numpy: threads would serialize on the
+GIL) and merges per-cell rows into the shared bench JSON.
+
+Determinism (docs/sweeps.md):
+  * The cell grid is enumerated in a fixed order (scenario list order ×
+    seed index), and every per-cell RNG derives from one
+    ``np.random.SeedSequence.spawn`` tree: root(master_seed) spawns one
+    child per cell by cell INDEX, and each child spawns the pair
+    (workload rng, simulation rng). No RNG state is shared across
+    cells, so results are a function of the cell spec alone.
+  * Rows are merged keyed by cell id, so worker count, scheduling, and
+    completion order cannot change the output: a sharded sweep and its
+    serial replay (``--workers 1``) are bit-identical per query — each
+    row carries a SHA-256 over every query's exact result floats (and a
+    completion-order hash), asserted in tests/test_vectorized.py and
+    gated against tests/golden/sweep_cells.json in CI (--check-golden).
+
+Usage:
+  python benchmarks/sweep.py --scenarios engine_off,pools3_backlog \
+      --seeds 4 --n 5000 --workers 8 --budget-s 300
+  python benchmarks/sweep.py --check-golden tests/golden/sweep_cells.json
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import hashlib
+import json
+import multiprocessing
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.scale import (  # noqa: E402
+    DAY_S,
+    SEED_DAY_QUERIES,
+    _pools3_autoscale,
+    _pools3_specs,
+)
+from repro.core import Policy, SimConfig, Simulation, SLAConfig  # noqa: E402
+from repro.core.query import reset_qids  # noqa: E402
+from repro.core.workload import generate, scaled_patterns  # noqa: E402
+
+#: every sweepable scenario — the four classic rows plus the fusion day
+SCENARIOS = (
+    "engine_off",
+    "engine_on",
+    "pools3_runqueue",
+    "pools3_backlog",
+    "pools3_fuse_cross",
+)
+
+
+def scenario_cfg(scenario: str, seed) -> SimConfig:
+    """The SimConfig of one sweep scenario. `seed` may be an int or a
+    SeedSequence (numpy's default_rng accepts both); the sweep passes
+    each cell's spawned child so no two cells share RNG state."""
+    if scenario in ("engine_off", "engine_on"):
+        on = scenario == "engine_on"
+        return SimConfig(
+            policy=Policy.AUTO, vm_mode="sos", vm_chips=64,
+            sos_slice_chips=16, use_calibration=False, seed=seed,
+            sla=SLAConfig(vm_overload_threshold=12,
+                          preempt_best_effort=on, spill_enabled=on),
+        )
+    if scenario in ("pools3_runqueue", "pools3_backlog", "pools3_fuse_cross"):
+        backlog = scenario != "pools3_runqueue"
+        fuse = scenario == "pools3_fuse_cross"
+        return SimConfig(
+            policy=Policy.FORCE, use_calibration=False, seed=seed,
+            fuse_queries=fuse, cross_pool_fusion=fuse,
+            sla=SLAConfig(vm_overload_threshold=12, preempt_best_effort=True,
+                          spill_enabled=True, spill_back_enabled=backlog,
+                          spill_back_low_backlog_s=5.0),
+            pools=_pools3_specs(_pools3_autoscale(backlog)),
+        )
+    raise ValueError(f"unknown scenario {scenario!r} (expected {SCENARIOS})")
+
+
+def build_cells(scenarios, n_seeds: int, n_target: int,
+                master_seed: int) -> list[dict]:
+    """The deterministic cell grid. Cell order — and therefore which
+    SeedSequence child each cell receives — depends only on the
+    (scenarios, n_seeds, n_target, master_seed) arguments, never on
+    worker scheduling."""
+    cells = [
+        {
+            "cell": f"{scenario}:n{n_target}:s{si}",
+            "scenario": scenario,
+            "seed_index": si,
+            "n_target": n_target,
+            "master_seed": master_seed,
+        }
+        for scenario in scenarios
+        for si in range(n_seeds)
+    ]
+    children = np.random.SeedSequence(master_seed).spawn(len(cells))
+    for cell, child in zip(cells, children):
+        cell["ss"] = child
+    return cells
+
+
+def _fingerprint(res) -> tuple[str, str]:
+    """(sorted-by-qid result hash, completion-order hash) over every
+    query's exact floats — repr round-trips IEEE doubles losslessly, so
+    equal hashes mean bit-identical per-query results."""
+    h = hashlib.sha256()
+    for q in sorted(res.queries, key=lambda q: q.qid):
+        h.update(
+            f"{q.qid}|{q.cost!r}|{q.chip_seconds!r}|{q.finish_time!r}|"
+            f"{q.start_time!r}|{q.cluster}|{len(q.stage_trace)}|"
+            f"{q.retries}|{q.preemptions}|{q.spilled}|"
+            f"{q.spill_backs}\n".encode()
+        )
+    ho = hashlib.sha256()
+    for q in res.queries:
+        ho.update(f"{q.qid},".encode())
+    return h.hexdigest(), ho.hexdigest()
+
+
+def run_cell(cell: dict) -> dict:
+    """Worker entry point: run one cell, return its merged-row dict.
+    Pure function of the cell spec (including its SeedSequence child):
+    safe under any worker count or completion order. Qids restart at 0
+    per cell, so the fingerprints don't depend on what else ran in this
+    worker process before."""
+    reset_qids()
+    gen_ss, sim_ss = cell["ss"].spawn(2)
+    factor = cell["n_target"] / SEED_DAY_QUERIES
+    t0 = time.perf_counter()
+    qs = generate(horizon_s=DAY_S, seed=gen_ss,
+                  patterns=scaled_patterns(factor))
+    gen_s = time.perf_counter() - t0
+    sim = Simulation(scenario_cfg(cell["scenario"], sim_ss))
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        res = sim.run(qs)
+        wall = time.perf_counter() - t0
+    finally:
+        gc.enable()
+    t0 = time.perf_counter()
+    sha, order_sha = _fingerprint(res)
+    s = res.summary()
+    imm_waits = [
+        q.queue_wait or 0.0
+        for q in res.queries
+        if q.effective_sla is not None and q.effective_sla.short == "imm"
+    ]
+    accounting_s = time.perf_counter() - t0
+    return {
+        "cell": cell["cell"],
+        "scenario": cell["scenario"],
+        "seed_index": cell["seed_index"],
+        "master_seed": cell["master_seed"],
+        "n": len(qs),
+        "wall_s": round(wall, 3),
+        "gen_s": round(gen_s, 3),
+        "accounting_s": round(accounting_s, 3),
+        "qps": int(len(qs) / max(wall, 1e-9)),
+        "stages": s["stages"],
+        "total_cost": s["total_cost"],
+        "violations": s["violations"],
+        "preemptions": s["preemptions"],
+        "spilled": s["spilled"],
+        "spill_backs": s["spill_backs"],
+        "fused_queries": s["fused_queries"],
+        "imm_p95_wait_s": round(float(np.percentile(imm_waits, 95)), 2)
+        if imm_waits else 0.0,
+        "sha256": sha,
+        "order_sha256": order_sha,
+    }
+
+
+def run_sweep(cells: list[dict], workers: int,
+              budget_s: float | None = None) -> tuple[dict, float]:
+    """Run the grid, sharded over `workers` forked processes (serial
+    in-process when workers <= 1), and merge rows keyed by cell id.
+    Returns (rows, sweep wall seconds). ``budget_s`` is a hard guard:
+    blowing it raises SystemExit(1) mid-collection."""
+    t0 = time.perf_counter()
+    rows: dict[str, dict] = {}
+
+    def _take(row: dict) -> None:
+        rows[row["cell"]] = row
+        if budget_s is not None and time.perf_counter() - t0 > budget_s:
+            print(f"FAIL: sweep exceeded the {budget_s}s wall budget "
+                  f"after {len(rows)}/{len(cells)} cells")
+            raise SystemExit(1)
+
+    if workers <= 1:
+        for cell in cells:
+            _take(run_cell(cell))
+    else:
+        # fork: workers inherit the loaded modules; the simulator is
+        # pure Python + numpy so there are no thread-state hazards
+        ctx = multiprocessing.get_context("fork")
+        with ctx.Pool(workers) as pool:
+            it = pool.imap_unordered(run_cell, cells)
+            while len(rows) < len(cells):
+                try:
+                    row = (it.next() if budget_s is None
+                           else it.next(timeout=max(
+                               budget_s - (time.perf_counter() - t0), 0.1)))
+                except multiprocessing.TimeoutError:
+                    pool.terminate()
+                    print(f"FAIL: sweep exceeded the {budget_s}s wall "
+                          f"budget after {len(rows)}/{len(cells)} cells")
+                    raise SystemExit(1)
+                _take(row)
+    return rows, time.perf_counter() - t0
+
+
+def merge_out(out_path: Path, rows: dict, meta: dict,
+              profile: bool) -> float:
+    """Merge the sweep rows into the shared bench JSON, preserving every
+    section other tools own (benchmarks/scale.py's `rows`/`derived`),
+    and append a cross-PR trajectory entry. Returns merge wall secs."""
+    t0 = time.perf_counter()
+    out = {}
+    if out_path.exists():
+        try:
+            out = json.loads(out_path.read_text())
+        except (json.JSONDecodeError, OSError):
+            out = {}
+    sweep = out.setdefault("sweep", {})
+    sweep["cells"] = {k: rows[k] for k in sorted(rows)}
+    sweep["meta"] = meta
+    if profile:
+        sweep["profile"] = {
+            "arrival_gen_s": round(sum(r["gen_s"] for r in rows.values()), 3),
+            "advance_loop_s": round(sum(r["wall_s"] for r in rows.values()), 3),
+            "accounting_s": round(
+                sum(r["accounting_s"] for r in rows.values()), 3),
+            "merge_s": None,  # patched below, after the write is timed
+        }
+    out.setdefault("trajectory", []).append({
+        "label": meta["label"],
+        "sweep_cells": meta["cells"],
+        "concurrent_workers": meta["workers"],
+        "sweep_wall_s": meta["wall_s"],
+        "sim_queries": meta["sim_queries"],
+        "agg_qps": meta["agg_qps"],
+    })
+    merge_s = round(time.perf_counter() - t0, 3)
+    if profile:
+        sweep["profile"]["merge_s"] = merge_s
+    out_path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    return merge_s
+
+
+def check_golden(rows: dict, golden_path: Path) -> int:
+    """CI drift gate: every golden cell must exist in the sweep with a
+    bit-identical per-query fingerprint. Returns the number of drifts."""
+    golden = json.loads(golden_path.read_text())
+    drifts = 0
+    for cell_id, want in golden["cells"].items():
+        got = rows.get(cell_id)
+        if got is None:
+            print(f"DRIFT {cell_id}: missing from sweep")
+            drifts += 1
+            continue
+        for f in ("sha256", "order_sha256", "n", "total_cost"):
+            if got[f] != want[f]:
+                print(f"DRIFT {cell_id}.{f}: {got[f]!r} != golden "
+                      f"{want[f]!r}")
+                drifts += 1
+    if not drifts:
+        print(f"golden check OK: {len(golden['cells'])} cells bit-identical")
+    return drifts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", default=",".join(SCENARIOS),
+                    help="comma-separated scenario list")
+    ap.add_argument("--seeds", type=int, default=4,
+                    help="seed indices 0..N-1 per scenario")
+    ap.add_argument("--n", type=int, default=5000,
+                    help="queries per simulated day (per cell)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker processes (default: one per cell, "
+                    "capped at 20)")
+    ap.add_argument("--master-seed", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="hard sweep wall budget: exceed it -> exit 1")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parents[1] / "BENCH_scale.json"))
+    ap.add_argument("--label", default="sweep",
+                    help="trajectory entry label (e.g. the PR number)")
+    ap.add_argument("--profile", action="store_true",
+                    help="record the per-phase wall breakdown "
+                    "(arrival gen / advance loop / accounting / merge)")
+    ap.add_argument("--check-golden", default=None,
+                    help="compare cells against this golden JSON and "
+                    "exit 1 on any drift")
+    ap.add_argument("--write-golden", default=None,
+                    help="write the cells' fingerprints as a golden JSON")
+    args = ap.parse_args()
+
+    scenarios = [s for s in args.scenarios.split(",") if s]
+    cells = build_cells(scenarios, args.seeds, args.n, args.master_seed)
+    workers = (min(len(cells), 20) if args.workers is None
+               else args.workers)
+    print(f"sweep: {len(cells)} cells "
+          f"({len(scenarios)} scenarios x {args.seeds} seeds, "
+          f"n={args.n}/day), {workers} workers")
+    rows, wall = run_sweep(cells, workers, args.budget_s)
+
+    sim_queries = sum(r["n"] for r in rows.values())
+    meta = {
+        "label": args.label,
+        "master_seed": args.master_seed,
+        "n_target": args.n,
+        "scenarios": scenarios,
+        "seeds": args.seeds,
+        "cells": len(cells),
+        "workers": workers,
+        "wall_s": round(wall, 2),
+        "sim_queries": sim_queries,
+        # queries simulated per wall-second ACROSS the sweep — the
+        # number the ">= 20 concurrent cells" acceptance reads, next to
+        # the single-core per-cell qps inside each row
+        "agg_qps": int(sim_queries / max(wall, 1e-9)),
+        "budget_s": args.budget_s,
+    }
+    for k in sorted(rows):
+        r = rows[k]
+        print(f"  {k}: wall {r['wall_s']}s qps {r['qps']} "
+              f"cost {r['total_cost']} sha {r['sha256'][:12]}…")
+    print(f"sweep wall {meta['wall_s']}s, {meta['agg_qps']} q/s aggregate"
+          + (f" (budget {args.budget_s}s: OK)" if args.budget_s else ""))
+
+    merge_s = merge_out(Path(args.out), rows, meta, args.profile)
+    print(f"merged into {args.out} ({merge_s}s)")
+
+    if args.write_golden:
+        golden = {
+            "master_seed": args.master_seed,
+            "n_target": args.n,
+            "cells": {
+                k: {f: rows[k][f]
+                    for f in ("sha256", "order_sha256", "n", "total_cost")}
+                for k in sorted(rows)
+            },
+        }
+        Path(args.write_golden).write_text(
+            json.dumps(golden, indent=2, sort_keys=True) + "\n")
+        print(f"wrote golden {args.write_golden}")
+    if args.check_golden:
+        if check_golden(rows, Path(args.check_golden)):
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,8 @@ from functools import cached_property
 from pathlib import Path
 from typing import TYPE_CHECKING, Optional
 
+import numpy as np
+
 from ..configs import get_config
 from ..models.config import ModelConfig
 from ..perf.hw import V5E, HwSpec
@@ -54,20 +56,23 @@ class StagePlan:
 
     # suffix sums make every remaining-* view O(1): the backlog signal
     # and the coordinator's quotes call them per query per event, and
-    # chunked decode gives long generations hundreds of stages
+    # chunked decode gives long generations hundreds of stages.
+    # np.cumsum is a sequential left-to-right accumulate (np.add.accumulate,
+    # not the pairwise tree np.sum uses), so these are bit-identical to the
+    # old Python accumulation loop while building long plans in C.
     @cached_property
     def _suffix_time(self) -> tuple[float, ...]:
-        acc = [0.0]
-        for s in reversed(self.stages):
-            acc.append(acc[-1] + s.time_s)
-        return tuple(reversed(acc))
+        if not self.stages:
+            return (0.0,)
+        acc = np.cumsum([s.time_s for s in reversed(self.stages)])
+        return (*acc[::-1].tolist(), 0.0)
 
     @cached_property
     def _suffix_cs(self) -> tuple[float, ...]:
-        acc = [0.0]
-        for s in reversed(self.stages):
-            acc.append(acc[-1] + s.chip_seconds)
-        return tuple(reversed(acc))
+        if not self.stages:
+            return (0.0,)
+        acc = np.cumsum([s.chip_seconds for s in reversed(self.stages)])
+        return (*acc[::-1].tolist(), 0.0)
 
     # --- stage-cursor views (engine.py runs a query as a cursor) ------
     def remaining_time(self, cursor: int = 0) -> float:
@@ -104,7 +109,45 @@ def _decode_chunk_time(cfg: ModelConfig, batch: int, context0: int, n: int,
     independent of how it is chunked (chunk boundaries are a scheduling
     choice, not a cost), while later chunks correctly pay for the longer
     cache they read — the old model priced every chunk at the INITIAL
-    context, systematically under-quoting long generations."""
+    context, systematically under-quoting long generations.
+
+    The per-token KV walk is vectorized: the per-layer min(window,
+    context) sum collapses to one ``np.minimum.outer`` over the chunk's
+    contexts. All intermediates stay exact int64 (no overflow at any
+    realistic model/context size) and the final per-token times are
+    accumulated sequentially, so the result is bit-identical to the
+    scalar reference (``_decode_chunk_time_scalar``, kept as the
+    equivalence oracle for tests/test_vectorized.py)."""
+    if n <= 0:
+        return 0.0
+    n_active = cfg.active_params()
+    compute = 2 * n_active * batch / (chips * hw.peak_flops_bf16)
+    ssm = 0
+    if cfg.ssm_state:
+        n_mamba = sum(1 for k in cfg.layer_kinds() if k == "mamba")
+        ssm = n_mamba * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    windows = () if cfg.attention_free else tuple(cfg.window_pattern())
+    kv_unit = 2 * cfg.num_kv_heads * cfg.head_dim * 2  # k+v bf16 per tok
+    bw = chips * hw.hbm_bandwidth
+    ctx = context0 + np.arange(n, dtype=np.int64)
+    # falsy window (None or 0) = full attention over the whole context
+    n_full = sum(1 for w in windows if not w)
+    sliding = np.array([w for w in windows if w], dtype=np.int64)
+    kv = n_full * ctx
+    if sliding.size:
+        kv = kv + np.minimum.outer(ctx, sliding).sum(axis=1)
+    bytes_ = 2 * n_active + batch * (kv * kv_unit + ssm)
+    per_token = np.maximum(compute, bytes_ / bw)
+    total = 0.0
+    for t in per_token.tolist():  # sequential: total must not depend on
+        total += t                # numpy's pairwise summation tree
+    return total
+
+
+def _decode_chunk_time_scalar(cfg: ModelConfig, batch: int, context0: int,
+                              n: int, chips: int, hw: HwSpec = V5E) -> float:
+    """The original per-token loop — the equivalence oracle the
+    vectorized `_decode_chunk_time` is locked against in tests."""
     n_active = cfg.active_params()
     compute = 2 * n_active * batch / (chips * hw.peak_flops_bf16)
     ssm = 0

@@ -16,6 +16,17 @@ from .sla import ServiceLevel
 _qid = itertools.count()
 
 
+def reset_qids() -> None:
+    """Restart qid assignment from 0. Qids come from a process-global
+    counter, so two identical simulated days in one process get
+    different qids; a harness that fingerprints per-query results
+    across process shards (benchmarks/sweep.py) resets the counter at
+    each cell start so qids — and therefore the fingerprints — depend
+    only on the cell, not on what ran before it in the same process."""
+    global _qid
+    _qid = itertools.count()
+
+
 @dataclass(slots=True)
 class QueryWork:
     """Work descriptor, independent of where it runs."""

@@ -446,7 +446,10 @@ class QueryCoordinator:
                 return None
             if not self.should_spill(q, now, pool):
                 return None
-            return min(self.elastic_pools, key=lambda p: p.quote_cost(q))
+            ep = self.elastic_pools
+            if len(ep) == 1:  # common registry shape: skip the quote
+                return ep[0]
+            return min(ep, key=lambda p: p.quote_cost(q))
         # elastic pool: symmetric spill-back
         if not (self.cfg.spill_back_enabled and q.spilled):
             return None
@@ -465,6 +468,8 @@ class QueryCoordinator:
         # IMMEDIATE query returns to the fastest eligible pool, lower
         # levels to the cheapest — never registry order, which could
         # drop a latency-SLA query onto a 4x-slower pool
+        if len(eligible) == 1:  # one home to return to: skip the quote
+            return eligible[0]
         if q.current_sla is ServiceLevel.IMMEDIATE:
             return min(eligible, key=lambda p: p.quote(q, now)["latency_s"])
         return min(eligible, key=lambda p: p.quote_cost(q))

@@ -16,6 +16,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import os
 from dataclasses import dataclass, field
 from typing import Iterable, Optional
 
@@ -66,6 +67,10 @@ class SimConfig:
     #: from the dict fall back to PoolSpec.dryrun_dir (fitted at build
     #: time) or the declared constants.
     calibrations: Optional[dict] = None
+    #: disable the batched event drain and run the original one-event-
+    #: per-heap-pop loop — the equivalence oracle tests/test_vectorized.py
+    #: locks the drain against (also: REPRO_SCALAR_CORE=1)
+    scalar_core: bool = False
 
 
 @dataclass
@@ -251,6 +256,8 @@ class Simulation:
         submit, poll = self.service.submit, self.service.poll
         poll_period = cfg.sla.poll_period_s
         n_arrivals = len(arrivals)
+        scalar_core = (cfg.scalar_core
+                       or os.environ.get("REPRO_SCALAR_CORE", "") == "1")
 
         def push(t: float, kind: str) -> None:
             heappush(events, (t, next(counter), kind))
@@ -311,42 +318,74 @@ class Simulation:
             # decaying backlog trigger) — state that admits work only
             # changes at a pool's own events, so skipping the full
             # advance is behavior-preserving.
-            due = now + 1e-9
-            advanced = False
-            nxt = math.inf
-            for pool in pools:
-                h = pool._heap
-                while h:  # inline prune + peek
-                    e = h[0]
-                    if e[2].active and e[3] == e[2].epoch:
-                        break
-                    heappop(h)
-                if h and h[0][0] <= due:
-                    finished.extend(pool.advance_to(now))
-                    advanced = True
-                else:
-                    if pool.needs_tick:
-                        pool.tick(now)
-                        while h:  # a tick may admit (pending scale)
-                            e = h[0]
-                            if e[2].active and e[3] == e[2].epoch:
-                                break
-                            heappop(h)
-                    if h and h[0][0] < nxt:
-                        nxt = h[0][0]
-            if advanced:
-                # an advance may have re-homed work onto ANY pool (and
-                # changed its own heap): re-read every heap head
+            #
+            # BATCHED DRAIN: after the advance pass, the next stage wake
+            # `t` is often provably the very next event the outer heap
+            # would deliver — no arrival, poll, or earlier stage event
+            # can land before it (`t` is strictly below every entry in
+            # `events`, and a push here would only be popped right back).
+            # In that case the push+pop round trip through the event
+            # heap is elided and the advance pass reruns directly at
+            # `t`, so a run of pure stage-completion clusters is
+            # processed in one batched inner loop. Entries in `events`
+            # are totally ordered by (time, counter), so eliding an
+            # entry that would be the heap minimum — and would be popped
+            # before any later push — cannot reorder anything else: the
+            # event sequence, and therefore every float, is bit-identical
+            # to the scalar loop (cfg.scalar_core, the oracle
+            # tests/test_vectorized.py asserts against).
+            while True:
+                due = now + 1e-9
+                advanced = False
                 nxt = math.inf
                 for pool in pools:
                     h = pool._heap
-                    while h:
+                    while h:  # inline prune + peek
                         e = h[0]
                         if e[2].active and e[3] == e[2].epoch:
                             break
                         heappop(h)
-                    if h and h[0][0] < nxt:
-                        nxt = h[0][0]
+                    if h and h[0][0] <= due:
+                        finished.extend(pool.advance_to(now))
+                        advanced = True
+                    else:
+                        if pool.needs_tick:
+                            pool.tick(now)
+                            while h:  # a tick may admit (pending scale)
+                                e = h[0]
+                                if e[2].active and e[3] == e[2].epoch:
+                                    break
+                                heappop(h)
+                        if h and h[0][0] < nxt:
+                            nxt = h[0][0]
+                if advanced:
+                    # an advance may have re-homed work onto ANY pool
+                    # (and changed its own heap): re-read every head
+                    nxt = math.inf
+                    for pool in pools:
+                        h = pool._heap
+                        while h:
+                            e = h[0]
+                            if e[2].active and e[3] == e[2].epoch:
+                                break
+                            heappop(h)
+                        if h and h[0][0] < nxt:
+                            nxt = h[0][0]
+                if scalar_core or reschedule_poll or nxt is math.inf:
+                    # a pending poll push would change events[0] (and the
+                    # poll fast-forward reads the stage_wake set below),
+                    # so poll iterations always go through the heap
+                    break
+                t = nxt if nxt > now else now
+                if t >= stage_wake - 1e-12 or (events and t >= events[0][0]):
+                    # an earlier-or-equal event is already scheduled:
+                    # the outer loop must deliver it first
+                    break
+                # elide the (t, "stage") push + its immediate pop:
+                # mirrors `stage_wake = t` at push then the reset to inf
+                # when the event fires
+                stage_wake = math.inf
+                now = t
             if nxt is not math.inf:
                 t = nxt if nxt > now else now
                 if t < stage_wake - 1e-12:

@@ -106,24 +106,37 @@ def generate(
     patterns: tuple[PatternSpec, ...] = TABLE1,
     tokens_per_gb: int = TOKENS_PER_GB,
 ) -> list[Query]:
-    """The merged query stream (Fig. 5)."""
+    """The merged query stream (Fig. 5).
+
+    Generation is vectorized per pattern: one rng draw per pattern
+    (`_arrival_times`), one shared `QueryWork` per pattern (works are
+    value-compared and never mutated, so every query of a pattern can
+    reference the same instance — on a 1M-query day this removes a
+    million identical dataclass constructions), and the SLA round-robin
+    is materialized as one repeated list instead of an i%k per query.
+    Query objects (identity-keyed, mutated by the run) are still built
+    one per query, in the same order as the original per-query loop, so
+    qids and float submit times are bit-identical."""
     rng = np.random.default_rng(seed)
     queries: list[Query] = []
     for spec in patterns:
-        times = np.sort(_arrival_times(spec, horizon_s, rng))
+        times = np.sort(_arrival_times(spec, horizon_s, rng)).tolist()
         prompt = spec.db_gb * tokens_per_gb // max(spec.batch, 1)
-        for i, t in enumerate(times):
-            sla = spec.sla_cycle[i % len(spec.sla_cycle)]
-            work = QueryWork(
-                arch=spec.arch,
-                kind="serve",
-                batch=spec.batch,
-                prompt_tokens=int(prompt),
-                output_tokens=spec.output_tokens,
-            )
-            queries.append(
-                Query(work=work, sla=sla, submit_time=float(t), source=spec.name)
-            )
+        work = QueryWork(
+            arch=spec.arch,
+            kind="serve",
+            batch=spec.batch,
+            prompt_tokens=int(prompt),
+            output_tokens=spec.output_tokens,
+        )
+        n = len(times)
+        cycle = list(spec.sla_cycle)
+        slas = cycle * (n // len(cycle) + 1)  # == sla_cycle[i % k] per i
+        name = spec.name
+        queries.extend(
+            Query(work=work, sla=sla, submit_time=t, source=name)
+            for t, sla in zip(times, slas)
+        )
     queries.sort(key=lambda q: q.submit_time)
     return queries
 

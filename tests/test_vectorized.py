@@ -1,0 +1,331 @@
+"""Equivalence gate for the vectorized core (ISSUE 6).
+
+The batched event drain (core/simulator.py), the vectorized arrival
+generation (core/workload.py), and the vectorized decode-chunk/suffix-sum
+plan math (core/cost_model.py) must be BIT-identical to their scalar
+references — same floats, same ordering, same traces. Each vectorized
+path keeps its scalar oracle alive (``SimConfig.scalar_core``,
+``_decode_chunk_time_scalar``, an inline reference loop here) and this
+module locks the two together: on a golden-style full-featured day, and
+under seeded random preempt/spill/retry days (plus hypothesis-driven
+ones when hypothesis is installed), with chip-second conservation and
+gap/overlap-free stage traces re-asserted on every run.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from repro.configs import get_config
+from repro.core import (
+    FaultModel,
+    Policy,
+    PoolSpec,
+    Query,
+    QueryWork,
+    ServiceLevel,
+    SimConfig,
+    Simulation,
+    SLAConfig,
+)
+from repro.core.clusters import AutoscaleConfig
+from repro.core.cost_model import (
+    CostModel,
+    _decode_chunk_time,
+    _decode_chunk_time_scalar,
+)
+from repro.core.query import reset_qids
+from repro.core.workload import TABLE1, _arrival_times, generate, scaled_patterns
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep — the seeded gates below always run
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# workload generation: vectorized vs per-query reference loop
+# ---------------------------------------------------------------------------
+
+def _generate_reference(horizon_s: float, seed: int, patterns) -> list[Query]:
+    """The pre-vectorization per-query loop, kept inline as the oracle:
+    one work dataclass per query, sla_cycle indexed per query."""
+    rng = np.random.default_rng(seed)
+    queries: list[Query] = []
+    for spec in patterns:
+        times = np.sort(_arrival_times(spec, horizon_s, rng))
+        for i, t in enumerate(times):
+            prompt = spec.db_gb * 98_304 // max(spec.batch, 1)
+            work = QueryWork(
+                arch=spec.arch, kind="serve", batch=spec.batch,
+                prompt_tokens=int(prompt), output_tokens=spec.output_tokens,
+            )
+            sla = spec.sla_cycle[i % len(spec.sla_cycle)]
+            queries.append(Query(work=work, sla=sla, submit_time=float(t),
+                                 source=spec.name))
+    queries.sort(key=lambda q: q.submit_time)
+    return queries
+
+
+@pytest.mark.parametrize("seed,factor", [(0, 1.0), (42, 0.55), (7, 2.0)])
+def test_generate_matches_reference_loop(seed, factor):
+    pats = scaled_patterns(factor) if factor != 1.0 else TABLE1
+    reset_qids()
+    vec = generate(horizon_s=14_400.0, seed=seed, patterns=pats)
+    reset_qids()
+    ref = _generate_reference(14_400.0, seed, pats)
+    assert len(vec) == len(ref)
+    for a, b in zip(vec, ref):
+        assert a.qid == b.qid  # same construction order
+        assert a.submit_time == b.submit_time  # exact float
+        assert a.sla is b.sla
+        assert a.source == b.source
+        assert a.work == b.work
+
+
+# ---------------------------------------------------------------------------
+# cost model: vectorized decode-chunk walk and suffix sums vs scalar
+# ---------------------------------------------------------------------------
+
+ARCHS = ("qwen2-0.5b", "internlm2-1.8b", "granite-8b", "mixtral-8x7b",
+         "phi3.5-moe-42b-a6.6b", "paper-default")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_chunk_time_matches_scalar(arch):
+    cfg = get_config(arch)
+    for batch, ctx0, n, chips in itertools.product(
+        (1, 2, 4), (0, 7, 983_040), (1, 5, 64, 333), (8, 64)
+    ):
+        vec = _decode_chunk_time(cfg, batch, ctx0, n, chips)
+        ref = _decode_chunk_time_scalar(cfg, batch, ctx0, n, chips)
+        assert vec == ref, (arch, batch, ctx0, n, chips)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("chips", [8, 32])
+def test_stage_plan_suffix_sums_match_sequential(arch, chips):
+    cm = CostModel(use_calibration=False)
+    w = QueryWork(arch=arch, prompt_tokens=500_000, output_tokens=96)
+    plan = cm.plan(w, chips)
+    acc_t, acc_cs = 0.0, 0.0
+    times, css = [0.0], [0.0]
+    for s in reversed(plan.stages):
+        acc_t = acc_t + s.time_s  # same order as np.cumsum (sequential)
+        acc_cs = acc_cs + s.chip_seconds
+        times.append(acc_t)
+        css.append(acc_cs)
+    assert list(plan._suffix_time) == times[::-1]
+    assert list(plan._suffix_cs) == css[::-1]
+    assert plan.remaining_time(0) == plan._suffix_time[0]
+    assert plan.remaining_chip_seconds(len(plan.stages)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# batched event drain vs scalar core: bit-identical full days
+# ---------------------------------------------------------------------------
+
+def _signature(res):
+    """Everything observable about a run, exact floats included."""
+    per_query = [
+        (q.qid, q.submit_time, q.cost, q.chip_seconds, q.start_time,
+         q.finish_time, q.cluster, q.retries, q.preemptions, q.spilled,
+         q.spill_backs, tuple(q.stage_trace))
+        for q in sorted(res.queries, key=lambda q: q.qid)
+    ]
+    completion_order = [q.qid for q in res.queries]
+    return per_query, completion_order
+
+
+def _check_physics(res) -> None:
+    """Chip-second conservation + gap/overlap-free per-query traces —
+    the invariants the drain must preserve regardless of batching."""
+    seen: dict[int, list] = {}
+    for q in res.queries:
+        assert q.finish_time is not None and q.state == "done"
+        if q.stage_trace:
+            seen[id(q.stage_trace)] = q.stage_trace
+    for q in res.queries:
+        if id(q.stage_trace) in seen:  # fused members share the trace
+            continue
+    for tr in seen.values():
+        assert [e.index for e in tr] == list(range(len(tr)))
+        for a, b in zip(tr, tr[1:]):
+            assert b.start >= a.finish - 1e-9  # no overlap across hops
+    total_q = sum(q.chip_seconds for q in res.queries)
+    total_tr = sum(e.chip_seconds for tr in seen.values() for e in tr)
+    assert total_q == pytest.approx(total_tr, rel=1e-9)
+
+
+def _run_both(cfg_factory, qs_factory):
+    """One day, twice: scalar oracle vs batched drain, fresh queries and
+    qids each time so the comparison is free of cross-run state."""
+    outs = []
+    for scalar in (True, False):
+        reset_qids()
+        cfg = cfg_factory()
+        cfg.scalar_core = scalar
+        res = Simulation(cfg).run(qs_factory())
+        _check_physics(res)
+        outs.append(res)
+    return outs
+
+
+def _golden_style_cfg(seed: int = 42) -> SimConfig:
+    """The golden trace's shape: 3 heterogeneous pools, stage faults,
+    backlog autoscale, preemption + spill + spill-back — every feature
+    the drain's safety argument has to hold under at once."""
+    return SimConfig(
+        policy=Policy.FORCE, use_calibration=False, seed=seed,
+        fault=FaultModel(failure_prob=0.02, straggler_prob=0.02),
+        sla=SLAConfig(vm_overload_threshold=3, preempt_best_effort=True,
+                      spill_enabled=True, spill_back_enabled=True,
+                      spill_back_low_backlog_s=5.0),
+        pools=[
+            PoolSpec(name="vm", kind="reserved", chips=32, mode="sos",
+                     slice_chips=16,
+                     autoscale=AutoscaleConfig(
+                         enabled=True, min_chips=32, max_chips=64,
+                         step_chips=16, scale_delay_s=120.0,
+                         trigger="backlog", backlog_high_s=60.0,
+                         backlog_low_s=5.0)),
+            PoolSpec(name="spot", kind="reserved", chips=64, mode="sos",
+                     slice_chips=16, speed_factor=0.25,
+                     price_multiplier=0.15),
+            PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0,
+                     price_multiplier=10.0),
+        ],
+    )
+
+
+def test_batched_drain_bit_identical_on_golden_style_day():
+    a, b = _run_both(
+        _golden_style_cfg,
+        lambda: generate(horizon_s=14_400.0, seed=42,
+                         patterns=scaled_patterns(8.0)),
+    )
+    # the day must actually exercise every feature the drain's safety
+    # argument has to hold under — a quiet day proves nothing
+    assert sum(q.preemptions for q in a.queries) > 0
+    assert sum(q.spilled for q in a.queries) > 50
+    assert sum(q.retries for q in a.queries) > 100
+    assert sum(q.spill_backs for q in a.queries) > 5
+    assert _signature(a) == _signature(b)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 7, 11])
+def test_batched_drain_bit_identical_random_days(seed):
+    """Seeded random preempt/spill/retry days (the deterministic gate
+    that runs even without hypothesis installed)."""
+    _assert_drain_equivalent(seed, n=int(10 + (seed * 13) % 30),
+                             spill_back=bool(seed % 2),
+                             fuse=bool(seed % 3 == 0))
+
+
+def _random_stream(seed: int, n: int) -> list[Query]:
+    rng = np.random.default_rng(seed)
+    return [
+        Query(
+            work=QueryWork(
+                arch="paper-default",
+                prompt_tokens=int(rng.integers(50_000, 3_000_000)),
+                output_tokens=int(rng.integers(1, 256)),
+            ),
+            sla=ServiceLevel(int(rng.integers(0, 3))),
+            submit_time=float(rng.uniform(0, 600)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _assert_drain_equivalent(seed: int, n: int, spill_back: bool,
+                             fuse: bool = False) -> None:
+    def cfg_factory():
+        return SimConfig(
+            vm_mode="sos", vm_chips=32, sos_slice_chips=16,
+            use_calibration=False, seed=seed, fuse_queries=fuse,
+            fault=FaultModel(failure_prob=0.1, straggler_prob=0.1),
+            sla=SLAConfig(preempt_best_effort=True, spill_enabled=True,
+                          spill_back_enabled=spill_back,
+                          spill_back_low_backlog_s=30.0,
+                          vm_overload_threshold=3),
+        )
+    a, b = _run_both(cfg_factory, lambda: _random_stream(seed, n))
+    assert _signature(a) == _signature(b)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        n=st.integers(5, 30),
+        spill_back=st.booleans(),
+        fuse=st.booleans(),
+    )
+    def test_batched_drain_bit_identical_hypothesis(seed, n, spill_back,
+                                                    fuse):
+        """Hypothesis-driven random preempt/spill/retry days: the drain
+        must be bit-identical to the scalar oracle on ANY of them."""
+        _assert_drain_equivalent(seed, n, spill_back, fuse)
+
+
+# ---------------------------------------------------------------------------
+# sweep harness: sharded == serial, any worker count / completion order
+# ---------------------------------------------------------------------------
+
+_TIMING_FIELDS = {"wall_s", "gen_s", "accounting_s", "qps"}
+
+
+def _strip_timing(row: dict) -> dict:
+    return {k: v for k, v in row.items() if k not in _TIMING_FIELDS}
+
+
+def test_sweep_sharded_equals_serial():
+    from benchmarks.sweep import build_cells, run_sweep
+
+    cells = build_cells(["engine_off", "pools3_backlog"], 2, 300, 0)
+    serial, _ = run_sweep(
+        build_cells(["engine_off", "pools3_backlog"], 2, 300, 0), 1)
+    sharded, _ = run_sweep(cells, 2)
+    assert set(serial) == set(sharded)
+    for cell_id in serial:
+        assert _strip_timing(serial[cell_id]) == _strip_timing(
+            sharded[cell_id]), cell_id
+
+
+def test_sweep_seed_tree_is_deterministic():
+    """The SeedSequence.spawn tree depends only on (grid, master seed):
+    rebuilding the same grid yields byte-identical child states, and a
+    different master seed yields different ones."""
+    from benchmarks.sweep import build_cells
+
+    a = build_cells(["engine_off"], 3, 500, 0)
+    b = build_cells(["engine_off"], 3, 500, 0)
+    c = build_cells(["engine_off"], 3, 500, 1)
+    for x, y in zip(a, b):
+        assert x["ss"].entropy == y["ss"].entropy
+        assert x["ss"].spawn_key == y["ss"].spawn_key
+        assert np.array_equal(x["ss"].generate_state(4),
+                              y["ss"].generate_state(4))
+    assert not np.array_equal(a[0]["ss"].generate_state(4),
+                              c[0]["ss"].generate_state(4))
+
+
+def test_scalar_core_env_flag(monkeypatch):
+    """REPRO_SCALAR_CORE=1 forces the oracle loop without touching the
+    config — the hook the equivalence suite and bisection runs use."""
+    monkeypatch.setenv("REPRO_SCALAR_CORE", "1")
+    reset_qids()
+    res = Simulation(SimConfig(use_calibration=False)).run(
+        _random_stream(3, 12))
+    assert len(res.queries) == 12
+    assert all(q.finish_time is not None for q in res.queries)
