@@ -42,6 +42,7 @@ Usage: python benchmarks/scale.py [--factor 55] [--fast] [--skip-1m]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import gc
 import json
 import sys
@@ -53,6 +54,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np  # noqa: E402
 
 from repro.core import (  # noqa: E402
+    AllocationConfig,
+    CalibrationTable,
+    CostModel,
     Policy,
     PoolSpec,
     SimConfig,
@@ -313,6 +317,278 @@ def run_day_pools3(
     return _finish_row(_best_of(cfg, qs_factory, repeats), profile)
 
 
+# ---------------------------------------------------------------------------
+# per-query chips-per-stage allocation (core/allocation.py)
+# ---------------------------------------------------------------------------
+
+#: coordination tax of wider slices, applied to EVERY pool in BOTH arms
+#: of the comparison — without it the roofline is exactly chips-linear,
+#: chip-seconds are width-independent, and the frontier is degenerate
+ALLOC_OVERHEAD = 0.02
+
+
+def _pools3_alloc_specs(
+    autoscale: AutoscaleConfig, alloc: bool
+) -> list[PoolSpec]:
+    """The pools3 registry under a nonzero parallelism tax. The alloc
+    arm lets the autoscaled vm tier size slices per (work, service
+    level) over {8, 16}: every level buys the cheapest width whose
+    full-plan exec time meets its target — for the day's small serve
+    shape that is the cost-optimal 8 at every level (1 + 0.02*7 = 1.14x
+    chip-seconds vs the fixed slice's 1.30x), while the day's huge
+    shape goes wide wherever 8 would blow the level's exec budget
+    (IMMEDIATE falls through to the latency-optimal 16, RELAXED's 100s
+    budget also forces 16). The spot tier deliberately stays at the
+    fixed slice: it is already 4x slower, and narrowing it pushes its
+    quoted finishes past relaxed deadlines — the day then re-routes
+    onto the autoscaled vm tier and costs ~30% MORE than fixed-slice
+    (measured at 50k, seeds 0-2). Allocation is a per-pool opt-in
+    precisely so a throughput tier can sit the sweep out."""
+    grid = (
+        AllocationConfig(min_chips=8, max_chips=16, step_chips=8,
+                         imm_exec_target_s=5.0, rel_exec_target_s=100.0)
+        if alloc else None
+    )
+    return [
+        PoolSpec(name="vm", kind="reserved", chips=autoscale.min_chips,
+                 mode="sos", slice_chips=16, autoscale=autoscale,
+                 parallel_overhead=ALLOC_OVERHEAD, allocation=grid),
+        PoolSpec(name="spot", kind="reserved", chips=256, mode="sos",
+                 slice_chips=16, speed_factor=0.25, price_multiplier=0.15,
+                 parallel_overhead=ALLOC_OVERHEAD),
+        PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0,
+                 price_multiplier=10.0, parallel_overhead=ALLOC_OVERHEAD),
+    ]
+
+
+def run_day_alloc(n_target: int, alloc: bool, seed: int = 0,
+                  repeats: int = 1, profile: bool = False) -> dict:
+    """One pools3 day with the parallelism tax on, slice width fixed at
+    16 (`alloc=False`) vs chosen per (work, level) by the allocator
+    (`alloc=True`). The alloc rows also record the plan-cache and
+    allocator-memo counters, so the report can assert the frontier
+    sweep stayed cached across the whole day."""
+    factor = n_target / SEED_DAY_QUERIES
+    def qs_factory():
+        return generate(
+            horizon_s=DAY_S, seed=seed, patterns=scaled_patterns(factor)
+        )
+    cfg = SimConfig(
+        policy=Policy.FORCE,
+        use_calibration=False,
+        seed=seed,
+        sla=SLAConfig(
+            vm_overload_threshold=12,
+            preempt_best_effort=True,
+            spill_enabled=True,
+            spill_back_enabled=True,
+            spill_back_low_backlog_s=5.0,
+        ),
+        pools=_pools3_alloc_specs(_pools3_autoscale(True), alloc),
+    )
+    best = _best_of(cfg, qs_factory, repeats)
+    row = _finish_row(best, profile)
+    if alloc:
+        sim = best[0]
+        plan_cache = {}
+        allocator = {}
+        for p in sim.pools:
+            plan_cache[p.name] = p.cost_model.plan_cache_stats()
+            if p.allocator is not None:
+                allocator[p.name] = p.allocator.stats()
+        row["plan_cache"] = plan_cache
+        row["allocator"] = allocator
+        hits = sum(st["hits"] for st in plan_cache.values())
+        misses = sum(st["misses"] for st in plan_cache.values())
+        row["plan_cache_hit_rate"] = round(hits / max(hits + misses, 1), 4)
+    return row
+
+
+#: the drift-admission scenario, matching benchmarks/calibration.py:
+#: every pool's true speed, with the gated pool DECLARED 2x faster —
+#: so its quotes are exactly 2x optimistic (median relative quote
+#: error 0.5, the uncalibrated baseline in BENCH_calibration.json)
+DRIFT_TRUE_SPEED = {"vm": 1.0, "spot": 0.25, "cf": 1.0}
+DRIFT_POOL = "vm"
+
+
+def drift_admission_report(n_target: int, seed: int = 0) -> dict:
+    """Calibrated admission control on a pool declared 2x wrong.
+
+    A ground-truth pools3 day (true speeds) supplies measured vm stage
+    walls. The declared model quotes them 2x fast — median relative
+    quote error 0.5 exactly. Feeding those (predicted, measured) pairs
+    into the drift EWMA trips the gate, and repricing quotes by the
+    measured drift ratio collapses the median error to ~0. A second sim
+    day then runs with the mis-declared vm pool and its pre-armed drift
+    table injected, counting the coordinator's actual interventions."""
+    factor = n_target / SEED_DAY_QUERIES
+    sla = SLAConfig(vm_overload_threshold=12, preempt_best_effort=True,
+                    spill_enabled=True, spill_back_enabled=True,
+                    spill_back_low_backlog_s=5.0)
+
+    def specs(declared_2x: bool) -> list[PoolSpec]:
+        auto = _pools3_autoscale(True)
+        out = []
+        for s in _pools3_specs(auto):
+            speed = DRIFT_TRUE_SPEED[s.name]
+            if declared_2x and s.name == DRIFT_POOL:
+                speed *= 2.0
+            out.append(dataclasses.replace(s, speed_factor=speed))
+        return out
+
+    # ground truth: the day at TRUE speeds -> measured vm stage walls
+    qs = generate(horizon_s=DAY_S, seed=seed,
+                  patterns=scaled_patterns(factor))
+    truth = Simulation(SimConfig(
+        policy=Policy.FORCE, use_calibration=False, seed=seed, sla=sla,
+        pools=specs(False),
+    )).run(qs)
+    samples = [
+        (q.work, e.index, e.chips, e.finish - e.start)
+        for q in truth.queries
+        for e in q.stage_trace
+        if e.cluster == DRIFT_POOL and e.retries == 0
+    ]
+    declared = CostModel(use_calibration=False,
+                         speed_factor=2.0 * DRIFT_TRUE_SPEED[DRIFT_POOL])
+
+    def _median(vals):
+        vals = sorted(vals)
+        return vals[len(vals) // 2]
+
+    preds = [
+        (declared.plan(work, chips).stages[index].time_s, wall)
+        for work, index, chips, wall in samples
+    ]
+    err_before = _median([abs(p - w) / w for p, w in preds if w > 0])
+    # arm the gate with the measured drift, then reprice the same quotes
+    table = CalibrationTable(drift_bound=0.25)
+    for p, w in preds[:256]:
+        if p > 0:
+            table.observe_drift(p, w)
+    ratio = table.drift_ratio()
+    err_repriced = _median([
+        abs(p * ratio - w) / w for p, w in preds if w > 0
+    ])
+    # the intervention count: a sim day on the MIS-DECLARED registry
+    # with the armed table injected into the drifted pool
+    qs2 = generate(horizon_s=DAY_S, seed=seed,
+                   patterns=scaled_patterns(factor))
+    gated = Simulation(SimConfig(
+        policy=Policy.FORCE, use_calibration=False, seed=seed, sla=sla,
+        pools=specs(True), calibrations={DRIFT_POOL: table},
+    )).run(qs2)
+    return {
+        "pool": DRIFT_POOL,
+        "n_stage_walls": len(samples),
+        "declared_speed": 2.0 * DRIFT_TRUE_SPEED[DRIFT_POOL],
+        "true_speed": DRIFT_TRUE_SPEED[DRIFT_POOL],
+        "drift_ratio": round(ratio, 4),
+        "median_quote_err_declared": round(err_before, 4),
+        "median_quote_err_repriced": round(err_repriced, 6),
+        "uncalibrated_baseline": 0.5,  # BENCH_calibration.json, offline
+        "below_uncalibrated_baseline": bool(err_repriced < 0.5),
+        "drift_reprices": gated.drift_reprices,
+        "drift_rejects": gated.drift_rejects,
+    }
+
+
+def _alloc_section(rows: dict, n_target: int, args) -> dict:
+    """The allocation dominance seeds + the drift-admission report.
+    Records the first seed's fixed/alloc pair as bench rows and returns
+    the `allocation` section of BENCH_scale.json. The dominance
+    predicate — allocation no worse on billed cost at equal-or-better
+    IMMEDIATE p95 wait — must hold on EVERY seed."""
+    seeds = {}
+    for seed in range(args.alloc_seeds):
+        fixed = run_day_alloc(n_target, False, seed=seed,
+                              repeats=args.repeats)
+        alloc = run_day_alloc(n_target, True, seed=seed,
+                              repeats=args.repeats)
+        dominates = bool(
+            alloc["total_cost"] <= fixed["total_cost"]
+            and alloc["imm_p95_wait_s"] <= fixed["imm_p95_wait_s"]
+        )
+        seeds[seed] = {"fixed": fixed, "alloc": alloc,
+                       "alloc_dominates_fixed": dominates}
+        print(f"pools3_alloc seed {seed}: fixed cost "
+              f"{fixed['total_cost']} p95 {fixed['imm_p95_wait_s']} | "
+              f"alloc cost {alloc['total_cost']} p95 "
+              f"{alloc['imm_p95_wait_s']} hit_rate "
+              f"{alloc.get('plan_cache_hit_rate')} dominates {dominates}")
+    rows["pools3_fixed_slice"] = seeds[0]["fixed"]
+    rows["pools3_alloc"] = seeds[0]["alloc"]
+    # the drift-admission scenario stays at the calibration benchmark's
+    # ~5k scale: its claim is about quote error, not throughput
+    n_drift = min(n_target, 5010)
+    drift = drift_admission_report(n_drift)
+    print(f"drift_admission: {json.dumps(drift)}")
+    return {
+        "overhead": ALLOC_OVERHEAD,
+        "n_target": n_target,
+        "seeds": {
+            seed: {
+                "fixed_cost": s["fixed"]["total_cost"],
+                "alloc_cost": s["alloc"]["total_cost"],
+                "alloc_cost_delta_pct": round(100 * (
+                    s["alloc"]["total_cost"]
+                    / max(s["fixed"]["total_cost"], 1e-9) - 1), 2),
+                "fixed_imm_p95": s["fixed"]["imm_p95_wait_s"],
+                "alloc_imm_p95": s["alloc"]["imm_p95_wait_s"],
+                "plan_cache_hit_rate": s["alloc"].get(
+                    "plan_cache_hit_rate"),
+                "alloc_dominates_fixed": s["alloc_dominates_fixed"],
+            }
+            for seed, s in seeds.items()
+        },
+        "alloc_dominates_fixed_all_seeds": bool(all(
+            s["alloc_dominates_fixed"] for s in seeds.values()
+        )),
+        "sweep_cached_all_seeds": bool(all(
+            (s["alloc"].get("plan_cache_hit_rate") or 0.0) > 0.9
+            for s in seeds.values()
+        )),
+        "drift_queries": n_drift,
+        "drift_admission": drift,
+    }
+
+
+def _check_alloc(allocation: dict) -> None:
+    """The CI allocation gate: frontier dominance on every seed, the
+    sweep cached, and the drift gate actually intervening."""
+    d = allocation["drift_admission"]
+    ok = (
+        allocation["alloc_dominates_fixed_all_seeds"]
+        and allocation["sweep_cached_all_seeds"]
+        and d["drift_reprices"] >= 1
+        and d["below_uncalibrated_baseline"]
+    )
+    if not ok:
+        print(f"FAIL: allocation gate: {json.dumps(allocation)}")
+        raise SystemExit(1)
+    print("allocation gate passed: dominance on every seed, sweep "
+          f"cached, {d['drift_reprices']} drift reprices, median quote "
+          f"error {d['median_quote_err_repriced']} < "
+          f"{d['uncalibrated_baseline']}")
+
+
+def _write_bench(out_path_str: str, sections: dict) -> None:
+    """Merge-preserving write: keys other runs own (the sweep harness's
+    `sweep` section, the cross-PR `trajectory` list) survive a re-run —
+    each tool updates only its own sections of the one file."""
+    out_path = Path(out_path_str)
+    out = {}
+    if out_path.exists():
+        try:
+            out = json.loads(out_path.read_text())
+        except (json.JSONDecodeError, OSError):
+            out = {}
+    out.update(sections)
+    out_path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {out_path_str}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--factor", type=float, default=55.0,
@@ -323,6 +599,15 @@ def main() -> None:
                     help="skip the 1M-query-day row")
     ap.add_argument("--fuse-seeds", type=int, default=3,
                     help="seeds for the fusion dominance rows (0..N-1)")
+    ap.add_argument("--alloc-seeds", type=int, default=3,
+                    help="seeds for the allocation dominance rows (0..N-1)")
+    ap.add_argument("--alloc-only", action="store_true",
+                    help="run only the allocation + drift-admission "
+                    "sections (the CI allocation-smoke job)")
+    ap.add_argument("--check-alloc", action="store_true",
+                    help="fail (exit 1) unless allocation dominates "
+                    "fixed-slice on every seed, the sweep stayed cached, "
+                    "and the drift gate repriced at least one quote")
     ap.add_argument("--out", default=str(
         Path(__file__).resolve().parents[1] / "BENCH_scale.json"),
         help="write the full result JSON here")
@@ -339,6 +624,17 @@ def main() -> None:
     args = ap.parse_args()
     factor = args.factor / 10 if args.fast else args.factor
     n_target = int(SEED_DAY_QUERIES * factor)
+
+    if args.alloc_only:
+        # the CI allocation-smoke path: only the allocation + drift
+        # sections run, and only the "allocation" key of the bench file
+        # is rewritten (a smoke run must not clobber a full run's rows)
+        rows = {}
+        allocation = _alloc_section(rows, n_target, args)
+        _write_bench(args.out, {"allocation": allocation})
+        if args.check_alloc:
+            _check_alloc(allocation)
+        return
 
     rows = {}
     for name, on in (("engine_off", False), ("engine_on", True)):
@@ -392,6 +688,11 @@ def main() -> None:
             profile=args.profile,
         )
         print(f"pools3_1m: {json.dumps(rows['pools3_1m'])}")
+
+    allocation = (
+        _alloc_section(rows, n_target, args) if args.alloc_seeds > 0
+        else None
+    )
 
     on, off = rows["engine_on"], rows["engine_off"]
     bl, rq = rows["pools3_backlog"], rows["pools3_runqueue"]
@@ -475,21 +776,17 @@ def main() -> None:
         derived["pre_pr_scaling"] = PRE_PR_SCALING
     print(f"derived: {json.dumps(derived)}")
 
-    # merge-preserving write: keys other runs own (the sweep harness's
-    # `sweep` section, the cross-PR `trajectory` list) survive a scale
-    # re-run — each tool updates only its own sections of the one file
-    out_path = Path(args.out)
-    out = {}
-    if out_path.exists():
-        try:
-            out = json.loads(out_path.read_text())
-        except (json.JSONDecodeError, OSError):
-            out = {}
-    out.update({"rows": rows, "derived": derived,
-                "n_target": n_target, "factor": factor})
-    out_path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
-    print(f"wrote {args.out}")
+    sections = {"rows": rows, "derived": derived,
+                "n_target": n_target, "factor": factor}
+    if allocation is not None:
+        sections["allocation"] = allocation
+    _write_bench(args.out, sections)
 
+    if args.check_alloc:
+        if allocation is None:
+            print("FAIL: --check-alloc needs --alloc-seeds > 0")
+            raise SystemExit(1)
+        _check_alloc(allocation)
     if args.budget_s is not None:
         over = {
             name: r["wall_s"] for name, r in rows.items()

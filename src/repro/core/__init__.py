@@ -1,5 +1,6 @@
 """The paper's contribution: flexible performance SLAs for serverless
 query processing, with SOS (stage-oriented scaling) execution."""
+from .allocation import AllocationConfig, AllocationPoint, Allocator
 from .clusters import (
     AutoscaleConfig,
     CostEfficientCluster,

@@ -77,12 +77,65 @@ class CalibrationTable:
         speed_factor: Optional[float] = None,
         source: str = "",
         loader: Optional[Callable[[str, str], float]] = None,
+        drift_bound: Optional[float] = None,
+        drift_alpha: float = 0.25,
+        drift_min_samples: int = 4,
     ):
         self._factors: dict[tuple[str, str], float] = dict(factors or {})
         self.speed_factor = speed_factor
         self.source = source
         self._loader = loader
         self.version = next(_VERSION)
+        #: admission-control drift gate: when the EWMA of measured /
+        #: predicted stage walls strays more than this relative bound
+        #: from 1.0, the coordinator stops quoting this pool's stale
+        #: speed (reprice at measured speed, or reject — see
+        #: scheduler.QueryCoordinator). None disables the gate.
+        self.drift_bound = drift_bound
+        self.drift_alpha = drift_alpha
+        self.drift_min_samples = drift_min_samples
+        self._drift_log = 0.0  # log-space EWMA of measured/predicted
+        self._drift_n = 0
+
+    # --- admission-control drift gate ---------------------------------
+    def observe_drift(self, predicted_s: float, measured_s: float) -> None:
+        """Feed one predicted-vs-measured stage wall into the drift
+        EWMA. Deliberately NOT a version bump: drift gates ADMISSION
+        (quotes get repriced or rejected), it does not rescale plans —
+        plan caches stay valid, and only a real re-fit (``update`` /
+        ``set_speed_factor``, e.g. LiveCalibrator.maybe_apply) moves
+        the version."""
+        if predicted_s <= 0 or measured_s <= 0:
+            return
+        lr = math.log(measured_s / predicted_s)
+        if self._drift_n == 0:
+            self._drift_log = lr
+        else:
+            a = self.drift_alpha
+            self._drift_log = (1.0 - a) * self._drift_log + a * lr
+        self._drift_n += 1
+
+    def drift_ratio(self) -> Optional[float]:
+        """EWMA of measured/predicted stage walls (None before the first
+        observation). >1: the pool runs slower than quoted."""
+        return math.exp(self._drift_log) if self._drift_n else None
+
+    def drift_samples(self) -> int:
+        return self._drift_n
+
+    def drift_exceeded(self) -> bool:
+        """Whether quotes from this table's pool are currently stale:
+        the gate is armed (a bound is set and enough walls were seen)
+        and the drift EWMA strays past the bound."""
+        if self.drift_bound is None or self._drift_n < self.drift_min_samples:
+            return False
+        return abs(math.exp(self._drift_log) - 1.0) > self.drift_bound
+
+    def reset_drift(self) -> None:
+        """Forget the drift EWMA (a re-fit just landed: the new speed is
+        the measured one, so the old residuals no longer apply)."""
+        self._drift_log = 0.0
+        self._drift_n = 0
 
     def factor(self, arch: str, kind: str) -> float:
         """Correction factor for one (arch, kind). A miss asks the
@@ -128,7 +181,7 @@ class CalibrationTable:
 
     # --- persistence ---------------------------------------------------
     def as_dict(self) -> dict:
-        return {
+        out = {
             "speed_factor": self.speed_factor,
             "factors": {
                 f"{arch}/{kind}": round(v, 6)
@@ -136,6 +189,13 @@ class CalibrationTable:
             },
             "source": self.source,
         }
+        # drift-gate config only when armed: ungated tables keep the
+        # legacy payload byte-identical
+        if self.drift_bound is not None:
+            out["drift_bound"] = self.drift_bound
+            out["drift_alpha"] = self.drift_alpha
+            out["drift_min_samples"] = self.drift_min_samples
+        return out
 
     @classmethod
     def from_dict(cls, d: dict) -> "CalibrationTable":
@@ -147,6 +207,9 @@ class CalibrationTable:
             factors=factors,
             speed_factor=d.get("speed_factor"),
             source=d.get("source", ""),
+            drift_bound=d.get("drift_bound"),
+            drift_alpha=float(d.get("drift_alpha", 0.25)),
+            drift_min_samples=int(d.get("drift_min_samples", 4)),
         )
 
     def save(self, path) -> None:
@@ -398,6 +461,16 @@ class LiveCalibrator:
         if predicted <= 0 or wall_s <= 0:
             return
         lr = math.log(wall_s / predicted)
+        # admission-control drift: the pool's ACTIVE table (when its
+        # gate is armed) also sees the wall, measured against the
+        # CURRENT model — the one quotes are made from — not the frozen
+        # declared reference the speed fit uses
+        table = pool.cost_model.calibration
+        if table is not None and table.drift_bound is not None:
+            cur = pool.cost_model.plan(work, chips)
+            cur_pred = cur.stages[index].time_s
+            if cur_pred > 0:
+                table.observe_drift(cur_pred, wall_s)
         declared = pool.cost_model.speed_factor
         with self._mu:
             st = self._state.get(pool.name)
@@ -435,6 +508,18 @@ class LiveCalibrator:
         with self._mu:
             st = self._state.get(pool_name)
             return st["n"] if st else 0
+
+    def drift_ratio(self, pool) -> Optional[float]:
+        """The pool's admission-control drift EWMA (measured/predicted
+        against its ACTIVE table), None when the pool carries no table
+        or the gate has seen no walls — the per-pool drift bound itself
+        lives on the table (``CalibrationTable.drift_bound``)."""
+        table = pool.cost_model.calibration
+        return table.drift_ratio() if table is not None else None
+
+    def drift_exceeded(self, pool) -> bool:
+        table = pool.cost_model.calibration
+        return table.drift_exceeded() if table is not None else False
 
     def fitted_speed_factor(self, pool) -> Optional[float]:
         """Fit against the declared speed the ratios were MEASURED
@@ -475,6 +560,13 @@ class LiveCalibrator:
                     source=f"live:{pool.name}"
                     + (f" over [{base.source}]"
                        if base is not None and base.source else ""),
+                    # the drift gate survives the table swap: the live
+                    # table inherits the base's admission-control config
+                    drift_bound=base.drift_bound if base is not None else None,
+                    drift_alpha=base.drift_alpha if base is not None else 0.25,
+                    drift_min_samples=(
+                        base.drift_min_samples if base is not None else 4
+                    ),
                 )
                 pool.cost_model.set_calibration(table)
             else:
@@ -484,6 +576,9 @@ class LiveCalibrator:
                 ):
                     return False
                 table.set_speed_factor(fitted)
+            # the re-fit just moved quotes to the measured speed — the
+            # old drift residuals no longer describe them
+            table.reset_drift()
         if self.path is not None:
             self.save(self.path)
         return True

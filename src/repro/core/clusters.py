@@ -141,6 +141,11 @@ class CostEfficientCluster(ClusterExecutor):
         self.chip_seconds_provisioned = 0.0  # reserved-capacity accounting
         self._last_prov_t = 0.0
         self.slice_chips = sos_slice_chips
+        #: SOS chips currently held by running queries — an integer
+        #: counter (== len(running) * slice_chips for fixed slices,
+        #: exactly), which is what lets admission price variable-width
+        #: slices without an O(running) sum
+        self._used_chips = 0
         self.hw = hw
         self.preempt_best_effort = preempt_best_effort
         self._shared_rates = mode == "pos"  # POS: processor sharing
@@ -255,15 +260,51 @@ class CostEfficientCluster(ClusterExecutor):
 
     # --- engine hooks -------------------------------------------------
     def _plan_chips(self, q: Query) -> int:
-        return self.chips if self.mode == "pos" else self.slice_chips
+        if self.mode == "pos":
+            return self.chips
+        if self.allocator is not None:
+            w = self.allocator.choose(q.work, q.current_sla)
+            return max(1, min(w, self.chips))
+        return self.slice_chips
+
+    def _start_run(self, q: Query, now: float) -> _Run:
+        run = super()._start_run(q, now)
+        if self.mode == "sos":
+            self._used_chips += run.chips
+        return run
+
+    def _bl_retire_run(self, run: _Run) -> None:
+        if self.mode == "sos":
+            self._used_chips -= run.chips
+        super()._bl_retire_run(run)
 
     # --- placement interface ------------------------------------------
+    def effective_capacity(self) -> int:
+        """The chips a query admitted NOW can count on: current capacity
+        capped by any already-scheduled scale-in. Admitting against the
+        raw current chips in the window before a scale-in takes effect
+        overcommits the post-scale slice — the run keeps its chips when
+        the capacity change lands, so the pool would be over its new
+        budget for the run's whole residence."""
+        cap = self._chips
+        for _, target in self._pending_scale:
+            if target < cap:
+                cap = target
+        return cap
+
+    def _admit_width(self) -> int:
+        """The narrowest slice the next admission could need — what
+        ``has_capacity`` (no concrete query in hand yet) prices."""
+        if self.allocator is not None:
+            return max(1, min(self.allocator.config.min_chips, self._chips))
+        return self.slice_chips
+
     def has_capacity(self) -> bool:
         if self.waiting:
             return False
         if self.mode == "pos":
             return len(self.running) < self.max_concurrent
-        return (len(self.running) + 1) * self.slice_chips <= self.chips
+        return self._used_chips + self._admit_width() <= self.effective_capacity()
 
     def _run_remaining_cs(self, run: _Run, now) -> float:
         elapsed = 0.0 if now is None else max(now - run.last_update, 0.0)
@@ -377,12 +418,18 @@ class CostEfficientCluster(ClusterExecutor):
             if scaling:
                 self._schedule_autoscale(now)
             return
-        # SOS: fixed-size isolated slices
+        # SOS: isolated slices (fixed-size, or allocator-chosen width).
+        # Admission prices the HEAD's slice against the effective
+        # capacity — current chips capped by any pending scale-in — so a
+        # query admitted just before a scale-in lands can no longer
+        # overcommit the post-scale budget.
         if self.waiting:
-            used = len(self.running) * self.slice_chips
-            while self.waiting and used + self.slice_chips <= self._chips:
+            cap = self.effective_capacity()
+            while self.waiting:
+                width = self._plan_chips(self.waiting.peek_best())
+                if self._used_chips + width > cap:
+                    break
                 self._start_run(self._pop_waiting(), now)
-                used += self.slice_chips
         if scaling:
             self._schedule_autoscale(now)
         # stage-boundary preemption: a waiting IMMEDIATE query may bump a
@@ -479,6 +526,9 @@ class HighElasticCluster(ClusterExecutor):
         return int(min(self.max_chips, max(self.min_chips, want)))
 
     def _plan_chips(self, q: Query) -> int:
+        if self.allocator is not None:
+            w = self.allocator.choose(q.work, q.current_sla)
+            return int(min(self.max_chips, max(self.min_chips, w)))
         return self.slice_for(q)
 
     def _queue_delay_estimate(self, q: Query, now) -> float:

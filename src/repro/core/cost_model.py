@@ -13,6 +13,7 @@ mid-run hot swap flows into quotes immediately.
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import cached_property
 from pathlib import Path
@@ -189,23 +190,48 @@ class CostModel:
     a calibration hot swap flows into the very next quote. An injected
     table applies regardless of ``use_calibration``, which only gates
     the process-wide default table over ``results/dryrun``.
+
+    ``parallel_overhead`` models the coordination tax of spreading one
+    stage across a wider slice: every stage time is scaled by
+    ``1 + parallel_overhead * (chips - 1)``. The pure roofline is
+    exactly linear in chips (time ∝ 1/chips), which makes chip-seconds
+    — and therefore cost — width-independent and the latency/cost
+    frontier degenerate; a nonzero overhead restores the real trade
+    (wider = faster wall time, but more billed chip-seconds), which is
+    what the per-query allocator (core/allocation.py) sweeps. The
+    default 0.0 keeps every existing plan bit-identical.
     """
+
+    #: LRU bound on the plan cache: the per-query chips sweep multiplies
+    #: keys per (work shape × allocation), which grew the old unbounded
+    #: dict without limit on long heterogeneous days
+    PLAN_CACHE_MAX = 4096
 
     def __init__(self, hw: HwSpec = V5E, use_calibration: bool = True,
                  decode_chunk_tokens: int = 32, speed_factor: float = 1.0,
-                 calibration: Optional["CalibrationTable"] = None):
+                 calibration: Optional["CalibrationTable"] = None,
+                 parallel_overhead: float = 0.0):
         if speed_factor <= 0:
             raise ValueError(f"speed_factor must be > 0, got {speed_factor}")
+        if parallel_overhead < 0:
+            raise ValueError(
+                f"parallel_overhead must be >= 0, got {parallel_overhead}"
+            )
         self.hw = hw
         self.use_calibration = use_calibration
         self.decode_chunk_tokens = decode_chunk_tokens
         self.speed_factor = speed_factor
         self.calibration = calibration
+        self.parallel_overhead = parallel_overhead
         # key -> (table version the plan was computed under, plan);
         # entries are version-tagged so a plan computed concurrently
-        # with a hot swap can never be served under the NEW version
-        self._plan_cache: dict[tuple, tuple[int, StagePlan]] = {}
+        # with a hot swap can never be served under the NEW version.
+        # LRU-bounded: the chips axis in the key means an allocator
+        # sweep creates one entry per (work shape, width).
+        self._plan_cache: OrderedDict[tuple, tuple[int, StagePlan]] = OrderedDict()
         self._cal_version = -1
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
 
     def _table(self) -> Optional["CalibrationTable"]:
         if self.calibration is not None:
@@ -226,6 +252,17 @@ class CostModel:
     def invalidate_cache(self) -> None:
         self._plan_cache.clear()
         self._cal_version = -1
+
+    def plan_cache_stats(self) -> dict:
+        """Hit/miss counters (and current size) of the LRU plan cache —
+        what the scale benchmark asserts to show the allocator's chips
+        sweep stays cached instead of re-planning per query."""
+        return {
+            "hits": self.plan_cache_hits,
+            "misses": self.plan_cache_misses,
+            "size": len(self._plan_cache),
+            "max": self.PLAN_CACHE_MAX,
+        }
 
     def plan_version(self) -> int:
         """The active calibration table's version (0 when uncalibrated)
@@ -266,9 +303,16 @@ class CostModel:
                work.output_tokens, work.train_steps, work.seq_len, chips)
         cached = self._plan_cache.get(key)
         if cached is not None and cached[0] == ver:
+            self.plan_cache_hits += 1
+            self._plan_cache.move_to_end(key)
             return cached[1]
+        self.plan_cache_misses += 1
         cfg = get_config(work.arch)
         cal = self._cal(work.arch, work.kind)
+        if self.parallel_overhead:
+            # the parallelism tax composes with calibration exactly like
+            # the speed factor: it scales times, never plan structure
+            cal = cal * (1.0 + self.parallel_overhead * (chips - 1))
         stages: list[Stage] = []
         if work.kind == "train":
             t = _analytic_step(cfg, work.batch * work.seq_len, "train", chips)
@@ -297,6 +341,8 @@ class CostModel:
                     done += n
         out = StagePlan(tuple(stages))
         self._plan_cache[key] = (ver, out)
+        if len(self._plan_cache) > self.PLAN_CACHE_MAX:
+            self._plan_cache.popitem(last=False)
         return out
 
     def exec_time(self, work: QueryWork, chips: int) -> float:

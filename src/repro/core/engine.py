@@ -222,6 +222,20 @@ class WaitingQueue(list):
         while self:
             self.pop()
 
+    def peek_best(self) -> Query:
+        """The query ``pop_best`` would return, without removing it —
+        variable-width admission must price the head's slice before
+        committing to start it."""
+        by_seq = self._by_seq
+        for lane in self._lanes:
+            while lane:
+                q = by_seq.get(lane[0])
+                if q is None:
+                    lane.popleft()  # stale: removed through another path
+                    continue
+                return q
+        raise IndexError("peek_best from an empty waiting queue")
+
     # --- priority pop (SOS slice handoff) ----------------------------
     def pop_best(self) -> Query:
         """Earliest-enqueued query of the most urgent waiting level —
@@ -291,6 +305,10 @@ class ClusterExecutor:
         #: it together with the calibration version
         self.load_epoch = 0
         self._quote_cache: dict[tuple, tuple] = {}
+        #: per-query width chooser (core/allocation.py), attached by
+        #: build_pool when the pool's spec carries AllocationConfig;
+        #: None keeps the pool's fixed slice sizing
+        self.allocator = None
         #: runs currently flagged for stage-boundary preemption — lets
         #: the per-admission preempt bookkeeping skip its O(running)
         #: scan whenever flags already match the waiting IMMEDIATEs
@@ -362,8 +380,10 @@ class ClusterExecutor:
         The coordinator's per-query all-pools quote loop reads this, so
         routing re-plans only when a planning input actually changed."""
         w = q.work
+        # the service level is a planning input once an allocator sizes
+        # slices per level; without one it only widens cache granularity
         key = (w.arch, w.kind, w.batch, w.prompt_tokens, w.output_tokens,
-               w.train_steps, w.seq_len, q.stage_cursor)
+               w.train_steps, w.seq_len, q.stage_cursor, q.current_sla)
         ver = (self.cost_model.plan_version(), self.load_epoch)
         hit = self._quote_cache.get(key)
         if hit is not None and hit[0] == ver:

@@ -102,20 +102,44 @@ def price_menu(
             "uncorrected prices"
         )
     if pools is not None:
-        probe = Query(work=work, sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
-        rows = []
-        for p in pools:
-            chips = p.effective_chips(probe)
-            plan = p.cost_model.plan(work, chips)
-            rows.append(_PoolRow(
-                name=p.name,
-                kind=p.pool_kind,
-                exec_s=plan.exec_time,
-                cost=plan.chip_seconds * p.price_per_chip_s,
-            ))
-        if not rows:
+        pools = list(pools)
+        if not pools:
             raise ValueError("price_menu needs at least one pool")
-        return _menu_from_rows(rows, relaxed_deadline_s)
+
+        def rows_at(level: ServiceLevel) -> list[_PoolRow]:
+            probe = Query(work=work, sla=level, submit_time=0.0)
+            rows = []
+            for p in pools:
+                chips = p.effective_chips(probe)
+                plan = p.cost_model.plan(work, chips)
+                rows.append(_PoolRow(
+                    name=p.name,
+                    kind=p.pool_kind,
+                    exec_s=plan.exec_time,
+                    cost=plan.chip_seconds * p.price_per_chip_s,
+                ))
+            return rows
+
+        if not any(getattr(p, "allocator", None) is not None for p in pools):
+            # fixed-knob registry: one probe prices every level —
+            # byte-identical to the pre-allocator menu
+            return _menu_from_rows(
+                rows_at(ServiceLevel.BEST_EFFORT), relaxed_deadline_s
+            )
+        # per-query allocation: each level's row set is priced at the
+        # width the allocator would actually buy for THAT level, so the
+        # menu can no longer disagree with execution (the old single
+        # BEST_EFFORT probe quoted every level at the cost-optimal width)
+        imm = _menu_from_rows(
+            rows_at(ServiceLevel.IMMEDIATE), relaxed_deadline_s
+        )[0]
+        rel = _menu_from_rows(
+            rows_at(ServiceLevel.RELAXED), relaxed_deadline_s
+        )[1]
+        boe = _menu_from_rows(
+            rows_at(ServiceLevel.BEST_EFFORT), relaxed_deadline_s
+        )[2]
+        return [imm, rel, boe]
     # legacy knob pair: an explicit CalibrationTable corrects both rows
     # (registry pools carry their own calibrated models instead)
     cm = cost_model or CostModel(calibration=calibration)

@@ -186,12 +186,17 @@ class LiveExecutor(ClusterExecutor):
                 decode_chunk_tokens=engine.cfg.decode_chunk_tokens,
                 speed_factor=spec.speed_factor,
                 calibration=table,
+                parallel_overhead=spec.parallel_overhead,
             ),
             price_per_chip_s=price,
         )
         self.name = spec.name
         self.spec = spec
         self.engine = engine
+        if spec.allocation is not None:
+            from .allocation import Allocator
+
+            self.allocator = Allocator(self.cost_model, spec.allocation)
         self._mu = threading.RLock()
         self._cv = threading.Condition(self._mu)
         # qid -> (Query, placement token). The token is unique per
@@ -203,6 +208,12 @@ class LiveExecutor(ClusterExecutor):
 
     # --- registry interface (what the coordinator reads) --------------
     def _plan_chips(self, q: Query) -> int:
+        if self.allocator is not None:
+            # live pools honor the allocated width for quoting and
+            # billing; execution still occupies one worker thread, the
+            # width scales the billed chip-seconds like the simulator
+            w = self.allocator.choose(q.work, q.current_sla)
+            return max(1, min(w, self.spec.chips))
         return 1  # one worker thread per running query
 
     @property
@@ -216,7 +227,8 @@ class LiveExecutor(ClusterExecutor):
         with self._mu:
             qs = [q for q, _ in self.running.values()] + list(self.waiting)
         return sum(
-            self.cost_model.plan(q.work, 1).remaining_chip_seconds(q.stage_cursor)
+            self.cost_model.plan(q.work, self._plan_chips(q))
+            .remaining_chip_seconds(q.stage_cursor)
             for q in qs
         )
 
@@ -272,7 +284,8 @@ class LiveExecutor(ClusterExecutor):
         eng = self.engine
         try:
             lm = eng.models.ensure(q.work.arch, max(1, q.work.batch))
-            plan = self.cost_model.plan(q.work, 1)
+            chips = self._plan_chips(q)
+            plan = self.cost_model.plan(q.work, chips)
             if q.start_time is None:
                 q.start_time = eng.now()
             q.state = "running"
@@ -287,7 +300,8 @@ class LiveExecutor(ClusterExecutor):
                 finish = eng.now()
                 account_stage(
                     q, stage=stage.name, cluster=self.name, start=start,
-                    finish=finish, chips=1, billed_cs=finish - start,
+                    finish=finish, chips=chips,
+                    billed_cs=(finish - start) * chips,
                     price_per_chip_s=self.price_per_chip_s,
                 )
                 with self._mu:  # workers finish stages concurrently
@@ -298,7 +312,7 @@ class LiveExecutor(ClusterExecutor):
                     # boundary — structure is calibration-invariant, so
                     # the plan below stays index-compatible
                     eng.calibrator.observe(
-                        self, q.work, q.stage_cursor - 1, 1, finish - start
+                        self, q.work, q.stage_cursor - 1, chips, finish - start
                     )
                     eng.calibrator.maybe_apply(self)
                 if q.stage_cursor >= len(plan.stages):

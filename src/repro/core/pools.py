@@ -32,6 +32,7 @@ from typing import Optional
 import numpy as np
 
 from ..perf.hw import V5E, HwSpec
+from .allocation import AllocationConfig, Allocator
 from .clusters import (
     AutoscaleConfig,
     CostEfficientCluster,
@@ -74,6 +75,27 @@ class PoolSpec:
     #: filter for a mixed dryrun_dir: only records whose "hw" field or
     #: filename carry this tag belong to this pool's hardware
     hw_tag: str = ""
+    #: per-query chips-per-stage allocation bounds (core/allocation.py):
+    #: when set, the pool's slice width becomes a per-(work, service
+    #: level) decision swept over this grid instead of the fixed
+    #: slice_chips / tokens_per_chip sizing. None keeps the legacy
+    #: fixed-knob sizing bit-for-bit.
+    allocation: Optional[AllocationConfig] = None
+    #: coordination tax of wider slices: stage times scale by
+    #: ``1 + parallel_overhead * (chips - 1)`` (CostModel). 0.0 keeps
+    #: the pure — exactly chips-linear — roofline, under which every
+    #: width costs the same chip-seconds and the frontier is degenerate.
+    parallel_overhead: float = 0.0
+    #: admission-control drift gate (CalibrationTable.drift_bound):
+    #: when the pool's measured/predicted drift EWMA strays more than
+    #: this relative bound, the coordinator stops trusting its quotes.
+    #: None disables the gate for this pool.
+    drift_bound: Optional[float] = None
+    #: what a tripped gate does to this pool's quotes: "reprice" scales
+    #: them to the measured speed; "reject" routes new queries to other
+    #: candidate pools while any remain (falling back to reprice when
+    #: this pool is the only option)
+    drift_action: str = "reprice"
 
     def price_chip_hour(self, hw: HwSpec = V5E) -> float:
         if self.price_per_chip_hour is not None:
@@ -114,15 +136,37 @@ def build_pool(
     constant). An injected table applies regardless of
     `use_calibration`, which only gates the process-wide default."""
     sla = sla or SLAConfig()
+    if spec.drift_action not in ("reprice", "reject"):
+        raise ValueError(
+            f"unknown drift_action {spec.drift_action!r} for {spec.name!r} "
+            "(expected 'reprice' or 'reject')"
+        )
     table = calibration
     if table is None:
         table = fit_spec_calibration(spec, hw=hw)
+    if spec.drift_bound is not None:
+        # the drift gate needs a table to hold its EWMA; arm the pool's
+        # existing one (an injected table's own bound wins) or create
+        # one that reproduces the pool's table-less stage times exactly
+        # (the default dry-run loader when calibration is on, unit
+        # factors when it is off)
+        if table is None:
+            from .calibration import CalibrationTable, _load_default_factor
+
+            table = CalibrationTable(
+                loader=_load_default_factor if use_calibration else None,
+                source=f"drift-gate:{spec.name}",
+                drift_bound=spec.drift_bound,
+            )
+        elif table.drift_bound is None:
+            table.drift_bound = spec.drift_bound
     cm = CostModel(
         hw=hw,
         use_calibration=use_calibration,
         decode_chunk_tokens=decode_chunk_tokens,
         speed_factor=spec.speed_factor,
         calibration=table,
+        parallel_overhead=spec.parallel_overhead,
     )
     if spec.kind == "elastic":
         pool: ClusterExecutor = HighElasticCluster(
@@ -159,6 +203,8 @@ def build_pool(
     pool.name = spec.name
     pool.price_per_chip_s = spec.price_chip_hour(hw) / 3600.0
     pool.spec = spec  # type: ignore[attr-defined]
+    if spec.allocation is not None:
+        pool.allocator = Allocator(cm, spec.allocation)
     return pool
 
 

@@ -361,6 +361,17 @@ class QueryCoordinator:
             self.fusion = CrossPoolFusionIndex()
             for p in self.pools:
                 p.wait_observer = self.fusion
+        #: calibrated admission control (docs/allocation.md): quotes
+        #: from a pool whose drift EWMA exceeds its table's bound are
+        #: repriced at the measured speed, or the pool is dropped from
+        #: the candidate set ("reject") when alternatives remain. Every
+        #: intervention is counted into the run summary.
+        self.drift_reprices = 0
+        self.drift_rejects = 0
+        self._drift_on = any(
+            getattr(p.cost_model.calibration, "drift_bound", None) is not None
+            for p in self.pools
+        )
         self.reserved_pools = [
             p for p in self.pools if p.pool_kind == "reserved"
         ]
@@ -370,6 +381,90 @@ class QueryCoordinator:
 
     def pool_overloaded(self, pool: ClusterExecutor) -> bool:
         return pool.run_queue_len >= self.cfg.vm_overload_threshold
+
+    # ------------------------------------------------------------------
+    # Calibrated admission control: the drift gate over quotes.
+    # A pool's CalibrationTable tracks a log-EWMA of measured/predicted
+    # stage walls (fed by LiveCalibrator.observe live, or the drift
+    # stage observer the simulator wires); once it strays past the
+    # table's drift_bound, this pool's quotes are known-stale and must
+    # not be compared as-is against honest pools.
+    # ------------------------------------------------------------------
+    def refresh_drift_gate(self) -> None:
+        """Re-arm the gate after tables were attached or swapped on a
+        pool post-construction (the gate flag is precomputed so routing
+        with no armed table pays zero per-query cost)."""
+        self._drift_on = any(
+            getattr(p.cost_model.calibration, "drift_bound", None) is not None
+            for p in self.pools
+        )
+
+    def _drift_ratio(self, pool: ClusterExecutor) -> Optional[float]:
+        """measured/predicted reprice factor when the pool's quotes are
+        currently stale beyond its bound, else None."""
+        t = pool.cost_model.calibration
+        if t is None or not t.drift_exceeded():
+            return None
+        return t.drift_ratio()
+
+    def _drift_rejected(self, pool: ClusterExecutor) -> bool:
+        spec = getattr(pool, "spec", None)
+        if spec is None or getattr(spec, "drift_action", "reprice") != "reject":
+            return False
+        t = pool.cost_model.calibration
+        return t is not None and t.drift_exceeded()
+
+    def quoted_latency(self, pool: ClusterExecutor, q: Query,
+                       now: Optional[float]) -> float:
+        """The pool's latency quote, drift-repriced when its gate trips
+        (the drifted pool may still win — but at its measured speed)."""
+        lat = pool.quote(q, now)["latency_s"]
+        if self._drift_on:
+            r = self._drift_ratio(pool)
+            if r is not None:
+                self.drift_reprices += 1
+                lat *= r
+        return lat
+
+    def quoted_cost(self, pool: ClusterExecutor, q: Query) -> float:
+        """The pool's cost quote, drift-repriced: a pool running slower
+        than quoted also bills more chip-seconds than quoted."""
+        c = pool.quote_cost(q)
+        if self._drift_on:
+            r = self._drift_ratio(pool)
+            if r is not None:
+                self.drift_reprices += 1
+                c *= r
+        return c
+
+    def _drift_adjust(self, est: dict, q: Query) -> dict:
+        """LATENCY_AWARE view of the drift gate: reprice drifted pools'
+        estimates, drop "reject" pools while alternatives remain (a
+        rejected pool that is the ONLY option is repriced instead —
+        admission control reroutes, it never strands a query)."""
+        out: dict = {}
+        rejected: list[str] = []
+        for name, e in est.items():
+            p = self.by_name[name]
+            if self._drift_rejected(p):
+                rejected.append(name)
+                continue
+            r = self._drift_ratio(p)
+            if r is not None:
+                self.drift_reprices += 1
+                e = {"latency_s": e["latency_s"] * r, "cost": e["cost"] * r}
+            out[name] = e
+        if out:
+            self.drift_rejects += len(rejected)
+            return out
+        for name in rejected:
+            r = self._drift_ratio(self.by_name[name])
+            e = est[name]
+            if r is not None:
+                self.drift_reprices += 1
+                e = {"latency_s": e["latency_s"] * r, "cost": e["cost"] * r}
+            out[name] = e
+        return out
 
     @property
     def vm_overloaded(self) -> bool:
@@ -531,6 +626,8 @@ class QueryCoordinator:
         sla = q.current_sla
         if self.policy is Policy.LATENCY_AWARE:
             est = self.estimate(q, now)
+            if self._drift_on:
+                est = self._drift_adjust(est, q)
             target = q.latency_target_s
             ok = {
                 name: e for name, e in est.items()
@@ -555,10 +652,25 @@ class QueryCoordinator:
                     open_reserved or self.elastic_pools or self.reserved_pools
                 )
             candidates = candidates or self.pools  # all-elastic registry
+            if self._drift_on and len(candidates) > 1:
+                # admission control: route around "reject" pools whose
+                # drift gate tripped, as long as an alternative remains
+                kept = [p for p in candidates if not self._drift_rejected(p)]
+                if kept and len(kept) != len(candidates):
+                    self.drift_rejects += len(candidates) - len(kept)
+                    candidates = kept
             # quote only the candidate tier (a saturated pool's backlog
             # walk is pure waste when it is not a candidate anyway)
             if len(candidates) == 1:
                 pool = candidates[0]
+            elif self._drift_on:
+                if sla is ServiceLevel.IMMEDIATE:
+                    pool = min(
+                        candidates,
+                        key=lambda p: self.quoted_latency(p, q, now),
+                    )
+                else:
+                    pool = min(candidates, key=lambda p: self.quoted_cost(p, q))
             elif sla is ServiceLevel.IMMEDIATE:
                 pool = min(candidates, key=lambda p: p.quote(q, now)["latency_s"])
             else:

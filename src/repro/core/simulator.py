@@ -77,6 +77,11 @@ class SimConfig:
 class SimResult:
     queries: list[Query]
     cfg: SimConfig
+    #: calibrated admission-control interventions (QueryCoordinator):
+    #: quotes repriced at measured speed / pools routed around because
+    #: their drift gate tripped — 0 when no pool armed a drift bound
+    drift_reprices: int = 0
+    drift_rejects: int = 0
 
     def by_sla(self) -> dict[str, list[Query]]:
         out: dict[str, list[Query]] = {"imm": [], "rel": [], "boe": []}
@@ -152,6 +157,8 @@ class SimResult:
             "spilled": sum(q.spilled for q in self.queries),
             "spill_backs": sum(q.spill_backs for q in self.queries),
             "retries": sum(q.retries for q in self.queries),
+            "drift_reprices": self.drift_reprices,
+            "drift_rejects": self.drift_rejects,
         }
         if "vm" in cluster_share:  # legacy key, derived, only when real
             out["vm_share"] = cluster_share["vm"]
@@ -193,6 +200,21 @@ class Simulation:
             fuse_max=cfg.fuse_max,
         )
         self.coordinator.wire_rehoming()
+        # drift-gated pools feed their own measured stage walls into the
+        # table's admission-control EWMA (the sim-side counterpart of
+        # LiveCalibrator.observe); a pool with an observer already set
+        # keeps it — external calibration loops read the same hook
+        for pool in self.pools:
+            table = pool.cost_model.calibration
+            if (
+                table is not None
+                and table.drift_bound is not None
+                and pool.stage_observer is None
+            ):
+                def _observe_drift(q, stage, ev, _table=table):
+                    _table.observe_drift(stage.time_s, ev.finish - ev.start)
+
+                pool.stage_observer = _observe_drift
         self.vm = self.coordinator.vm
         self.cf = self.coordinator.cf
         self.service = ServiceLayer(
@@ -404,7 +426,11 @@ class Simulation:
         expanded: list[Query] = []
         for q in finished:
             expanded.extend(unpack_fused(q))
-        return SimResult(expanded, cfg)
+        return SimResult(
+            expanded, cfg,
+            drift_reprices=self.coordinator.drift_reprices,
+            drift_rejects=self.coordinator.drift_rejects,
+        )
 
 
 def run_sim(queries: list[Query], **kw) -> SimResult:

@@ -1,0 +1,531 @@
+"""Per-query chips-per-stage allocation (core/allocation.py) and the
+drift-gated admission control riding on it: frontier sweep semantics,
+the SOS capacity accounting it required, the plan-cache LRU bound, and
+the scheduler/simulator wiring."""
+import math
+
+import pytest
+
+from repro.core import (
+    AllocationConfig,
+    Allocator,
+    CostModel,
+    PoolSpec,
+    Policy,
+    Query,
+    QueryWork,
+    ServiceLevel,
+    SimConfig,
+    Simulation,
+    build_pool,
+    default_pool_specs,
+    generate,
+    price_menu,
+)
+from repro.core.calibration import CalibrationTable
+from repro.core.clusters import AutoscaleConfig, CostEfficientCluster
+from repro.core.scheduler import QueryCoordinator
+from repro.core.sla import SLAConfig
+
+ARCH = "paper-default"
+
+
+def _mk(sla, t, tokens=100_000, out=8):
+    return Query(
+        work=QueryWork(arch=ARCH, prompt_tokens=tokens, output_tokens=out),
+        sla=sla,
+        submit_time=t,
+    )
+
+
+def _work(tokens=512, out=128, batch=8):
+    return QueryWork(
+        arch=ARCH, kind="infer", batch=batch,
+        prompt_tokens=tokens, output_tokens=out,
+    )
+
+
+def _norm_finish(res):
+    base = min(q.qid for q in res.queries)
+    return [
+        (q.qid - base, q.cluster, q.finish_time, q.cost)
+        for q in sorted(res.queries, key=lambda q: q.qid)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# the frontier sweep and per-level choice
+# ---------------------------------------------------------------------------
+
+def test_frontier_is_monotone_under_parallel_overhead():
+    """Nonzero overhead makes wider strictly faster AND strictly more
+    expensive — a real frontier, not a degenerate tie."""
+    cm = CostModel(use_calibration=False, parallel_overhead=0.02)
+    alloc = Allocator(cm, AllocationConfig(min_chips=8, max_chips=32,
+                                           step_chips=8))
+    pts = alloc.frontier(_work())
+    execs = [p.exec_s for p in pts]
+    costs = [p.chip_seconds for p in pts]
+    assert execs == sorted(execs, reverse=True)
+    assert costs == sorted(costs)
+
+
+def test_per_level_choice_immediate_buys_wider_than_best_effort():
+    cm = CostModel(use_calibration=False, parallel_overhead=0.02)
+    alloc = Allocator(cm, AllocationConfig(min_chips=8, max_chips=16,
+                                           step_chips=8))
+    w = _work()
+    imm = alloc.choose(w, ServiceLevel.IMMEDIATE)
+    boe = alloc.choose(w, ServiceLevel.BEST_EFFORT)
+    assert imm == 16  # latency-optimal (no target set)
+    assert boe == 8  # cost-optimal
+    assert imm > boe
+
+
+def test_relaxed_meets_target_else_degrades_to_cost_optimal():
+    cm = CostModel(use_calibration=False, parallel_overhead=0.02)
+    w = _work()
+    wide_t = cm.plan(w, 16).exec_time
+    # a target only the wide slice meets -> relaxed buys the wide slice
+    alloc = Allocator(cm, AllocationConfig(
+        min_chips=8, max_chips=16, step_chips=8,
+        rel_exec_target_s=wide_t * 1.01,
+    ))
+    assert alloc.choose(w, ServiceLevel.RELAXED) == 16
+    # an unmeetable target -> the pending queue absorbs the deadline
+    alloc2 = Allocator(cm, AllocationConfig(
+        min_chips=8, max_chips=16, step_chips=8,
+        rel_exec_target_s=wide_t * 0.5,
+    ))
+    assert alloc2.choose(w, ServiceLevel.RELAXED) == 8
+
+
+def test_immediate_target_picks_cheapest_feasible_width():
+    cm = CostModel(use_calibration=False, parallel_overhead=0.02)
+    w = _work()
+    narrow_t = cm.plan(w, 8).exec_time
+    alloc = Allocator(cm, AllocationConfig(
+        min_chips=8, max_chips=16, step_chips=8,
+        imm_exec_target_s=narrow_t * 1.01,
+    ))
+    # the narrow width already meets the target and is cheaper
+    assert alloc.choose(w, ServiceLevel.IMMEDIATE) == 8
+
+
+def test_degenerate_zero_overhead_frontier_collapses_to_widest():
+    """The pure roofline is exactly chips-linear: every width bills the
+    same chip-seconds, so the tie-break takes the faster (wider) point —
+    wider is free."""
+    cm = CostModel(use_calibration=False)
+    alloc = Allocator(cm, AllocationConfig(min_chips=8, max_chips=16,
+                                           step_chips=8))
+    w = _work()
+    for lvl in ServiceLevel:
+        assert alloc.choose(w, lvl) == 16
+
+
+def test_widths_grid_keeps_ragged_max():
+    cfg = AllocationConfig(min_chips=4, max_chips=10, step_chips=4)
+    assert cfg.widths() == (4, 8, 10)
+    assert AllocationConfig(min_chips=4, max_chips=4).widths() == (4,)
+
+
+def test_allocation_config_validation():
+    with pytest.raises(ValueError):
+        AllocationConfig(min_chips=0)
+    with pytest.raises(ValueError):
+        AllocationConfig(min_chips=8, max_chips=4)
+    with pytest.raises(ValueError):
+        AllocationConfig(step_chips=0)
+
+
+def test_choose_memoized_and_invalidated_by_calibration_version():
+    table = CalibrationTable()
+    cm = CostModel(use_calibration=False, calibration=table,
+                   parallel_overhead=0.02)
+    alloc = Allocator(cm, AllocationConfig(min_chips=8, max_chips=16,
+                                           step_chips=8))
+    w = _work()
+    alloc.choose(w, ServiceLevel.IMMEDIATE)
+    alloc.choose(w, ServiceLevel.IMMEDIATE)
+    assert alloc.stats() == {"hits": 1, "misses": 1, "size": 1}
+    table.set_factor(ARCH, "infer", 2.0)  # hot swap -> version bump
+    alloc.choose(w, ServiceLevel.IMMEDIATE)
+    assert alloc.stats()["misses"] == 2
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: the plan cache is bounded LRU with counters
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_is_bounded_lru_with_counters():
+    cm = CostModel(use_calibration=False)
+    cm.PLAN_CACHE_MAX = 4  # shrink the bound for the test
+    shapes = [_work(tokens=1000 * (i + 1)) for i in range(6)]
+    for w in shapes:
+        cm.plan(w, 4)
+    st = cm.plan_cache_stats()
+    assert (st["hits"], st["misses"], st["size"]) == (0, 6, 4)
+    cm.plan(shapes[5], 4)  # most recent: still cached
+    assert cm.plan_cache_stats()["hits"] == 1
+    cm.plan(shapes[0], 4)  # oldest: evicted -> re-planned
+    assert cm.plan_cache_stats()["misses"] == 7
+    # LRU, not FIFO: touching an old entry protects it from eviction
+    cm.plan(shapes[3], 4)  # hit -> becomes most recent
+    cm.plan(_work(tokens=99_000), 4)  # evicts the LRU entry (shapes[4])
+    hits = cm.plan_cache_stats()["hits"]
+    cm.plan(shapes[3], 4)
+    assert cm.plan_cache_stats()["hits"] == hits + 1
+    cm.plan(shapes[4], 4)
+    assert cm.plan_cache_stats()["misses"] == 9
+
+
+def test_allocator_sweep_stays_inside_plan_cache():
+    """Re-sweeping the same work shapes is pure cache hits — the memo
+    plus the LRU keep a million-query day from re-planning."""
+    cm = CostModel(use_calibration=False, parallel_overhead=0.02)
+    alloc = Allocator(cm, AllocationConfig(min_chips=8, max_chips=32,
+                                           step_chips=8))
+    w = _work()
+    for lvl in ServiceLevel:
+        alloc.choose(w, lvl)
+    misses = cm.plan_cache_stats()["misses"]
+    alloc._memo.clear()  # force re-sweeps without a version change
+    for lvl in ServiceLevel:
+        alloc.choose(w, lvl)
+    st = cm.plan_cache_stats()
+    assert st["misses"] == misses  # every re-sweep plan was cached
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: SOS admission vs pending scale-in (overcommit regression)
+# ---------------------------------------------------------------------------
+
+def _sos_pool(chips=32, slice_chips=16, **auto):
+    # inert watermarks: autoscale stays enabled (so pending scale-ins
+    # apply) but never self-schedules one during the test
+    a = AutoscaleConfig(enabled=True, min_chips=16, max_chips=chips,
+                        step_chips=16, scale_delay_s=60.0,
+                        scale_in_delay_s=60.0, low_watermark=0,
+                        high_watermark=99, **auto)
+    return CostEfficientCluster(
+        chips=chips, mode="sos", sos_slice_chips=slice_chips,
+        cost_model=CostModel(use_calibration=False), autoscale=a,
+    )
+
+
+def test_sos_admission_respects_pending_scale_in():
+    """The regression: a pending scale-in caps what admission may
+    commit. The old check read raw current chips, so a query admitted
+    in the delay window overcommitted the post-scale slice."""
+    pool = _sos_pool()
+    pool.submit(_mk(ServiceLevel.BEST_EFFORT, 0.0), 0.0)
+    assert pool._used_chips == 16
+    assert pool.has_capacity()  # 16 + 16 <= 32, no scale-in pending
+    pool._pending_scale.append((60.0, 16))  # scheduled scale-in to 16
+    assert pool.effective_capacity() == 16
+    assert not pool.has_capacity()  # old code: 16 + 16 <= 32 -> admitted
+    q2 = _mk(ServiceLevel.BEST_EFFORT, 1.0)
+    pool.submit(q2, 1.0)
+    assert len(pool.waiting) == 1  # waits out the scale-in window
+    assert q2.start_time is None
+
+
+def test_sos_admits_exact_fit_at_the_boundary():
+    """The fix must not over-reserve either: an exact fit against the
+    effective capacity still admits, and a pending scale-OUT never caps
+    admission below current capacity."""
+    pool = _sos_pool()
+    pool.submit(_mk(ServiceLevel.BEST_EFFORT, 0.0), 0.0)
+    pool._pending_scale.append((60.0, 48))  # scale-OUT pending
+    assert pool.effective_capacity() == 32
+    assert pool.has_capacity()
+    q2 = _mk(ServiceLevel.BEST_EFFORT, 1.0)
+    pool.submit(q2, 1.0)  # exact fit: 16 + 16 == 32
+    assert len(pool.waiting) == 0
+    assert pool._used_chips == 32
+    assert not pool.has_capacity()  # full now
+
+
+def test_used_chips_counter_tracks_running_slices_exactly():
+    pool = _sos_pool(chips=48)
+    for i in range(3):
+        pool.submit(_mk(ServiceLevel.BEST_EFFORT, float(i)), float(i))
+    assert pool._used_chips == len(pool.running) * pool.slice_chips == 48
+    t = pool.next_event_time()
+    while t is not None:
+        pool.advance_to(t)
+        t = pool.next_event_time()
+    assert len(pool.running) == 0
+    assert pool._used_chips == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: the backlog watermark's -1e-6 early re-eval fudge
+# ---------------------------------------------------------------------------
+
+def test_backlog_watermark_re_eval_neither_skips_nor_loops():
+    """``_next_backlog_eval`` schedules the passive cold-crossing check
+    a hair (1e-6) EARLY. A re-eval landing exactly on that float-grid
+    time sees the backlog still a hair above the watermark: it must not
+    fire early, must not reschedule the check past the true crossing
+    (that would skip it), and must be idempotent at the same ``now`` (no
+    zero-progress re-trigger loop); the first re-eval past the true
+    crossing fires exactly one scale-in."""
+    a = AutoscaleConfig(enabled=True, min_chips=4, max_chips=16,
+                        step_chips=4, scale_delay_s=10.0,
+                        scale_in_delay_s=5.0, trigger="backlog",
+                        backlog_high_s=1e9, backlog_low_s=1.0)
+    pool = CostEfficientCluster(
+        chips=8, mode="sos", sos_slice_chips=4,
+        cost_model=CostModel(use_calibration=False), autoscale=a,
+    )
+    pool.submit(
+        _mk(ServiceLevel.BEST_EFFORT, 0.0, tokens=3_000_000), 0.0
+    )
+    t_eval = pool._as_next_eval
+    assert math.isfinite(t_eval) and t_eval > 0.0
+    # exactly on the scheduled grid point: the fudge means the drain is
+    # still (just) above the watermark -> no early fire
+    pool.tick(t_eval)
+    assert pool._pending_scale == []
+    assert pool.drain_time_s(t_eval) > a.backlog_low_s
+    # the re-eval must not move the check past the true crossing: the
+    # recomputed time is identical (state unchanged), so the crossing
+    # stays armed rather than skipped
+    assert pool._as_next_eval == t_eval
+    # idempotent at the same now — a repeated tick makes no state change
+    # (the event loop's poll stride provides the forward progress)
+    pool.tick(t_eval)
+    assert pool._pending_scale == [] and pool._as_next_eval == t_eval
+    # first re-eval past the true crossing (fudge + epsilon): exactly
+    # one scale-in fires
+    pool.tick(t_eval + 2e-6)
+    assert len(pool._pending_scale) == 1
+    eff_at, target = pool._pending_scale[0]
+    assert target == 4 and eff_at == pytest.approx(t_eval + 2e-6 + 5.0)
+
+
+# ---------------------------------------------------------------------------
+# the allocator threaded through pools / quotes / routing
+# ---------------------------------------------------------------------------
+
+def test_build_pool_attaches_allocator_and_overhead():
+    spec = PoolSpec(
+        name="r", kind="reserved", chips=64, mode="sos", slice_chips=16,
+        allocation=AllocationConfig(min_chips=8, max_chips=16, step_chips=8),
+        parallel_overhead=0.02,
+    )
+    pool = build_pool(spec, use_calibration=False)
+    assert pool.allocator is not None
+    assert pool.cost_model.parallel_overhead == 0.02
+    q_imm = _mk(ServiceLevel.IMMEDIATE, 0.0)
+    q_boe = _mk(ServiceLevel.BEST_EFFORT, 0.0)
+    assert pool.effective_chips(q_imm) == 16
+    assert pool.effective_chips(q_boe) == 8
+    # the level is a planning input: quotes price each level's own width
+    assert pool.quote_cost(q_imm) > pool.quote_cost(q_boe)
+
+
+def test_single_point_grid_is_bit_identical_to_fixed_slice():
+    """Allocator OFF vs a degenerate ON (one grid point == slice_chips,
+    zero overhead): per-query results identical — the allocation axis
+    changes nothing until it can actually choose."""
+    def specs(alloc):
+        return [
+            PoolSpec(name="r", kind="reserved", chips=64, mode="sos",
+                     slice_chips=16, allocation=alloc),
+            PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0,
+                     price_multiplier=10.0),
+        ]
+
+    qs = list(generate(horizon_s=3600, seed=5))
+    off = Simulation(SimConfig(use_calibration=False,
+                               pools=specs(None))).run(qs)
+    qs2 = list(generate(horizon_s=3600, seed=5))
+    on = Simulation(SimConfig(use_calibration=False, pools=specs(
+        AllocationConfig(min_chips=16, max_chips=16, step_chips=4)
+    ))).run(qs2)
+    assert _norm_finish(off) == _norm_finish(on)
+
+
+def test_price_menu_quotes_per_level_width():
+    overhead = dict(parallel_overhead=0.02)
+    alloc = AllocationConfig(min_chips=8, max_chips=16, step_chips=8)
+    pools = [
+        build_pool(PoolSpec(name="r", kind="reserved", chips=64,
+                            mode="sos", slice_chips=16, allocation=alloc,
+                            **overhead), use_calibration=False),
+        build_pool(PoolSpec(name="cf", kind="elastic", chips=64,
+                            startup_s=2.0, price_multiplier=10.0,
+                            allocation=alloc, **overhead),
+                   use_calibration=False),
+    ]
+    menu = price_menu(_work(), pools=pools)
+    imm, rel, boe = menu
+    assert imm.sla == "immediate" and boe.sla == "best_effort"
+    # immediate is quoted at the latency-optimal width: faster and (at
+    # nonzero overhead) more expensive than best-effort's cost-optimal
+    assert imm.est_exec_s < boe.est_exec_s
+    assert imm.est_cost > boe.est_cost
+
+
+def test_price_menu_without_allocator_matches_single_probe():
+    """Satellite bit-compat: a registry with no allocator prices every
+    level from one BEST_EFFORT probe — the legacy path, unchanged."""
+    pools = [
+        build_pool(PoolSpec(name="r", kind="reserved", chips=64,
+                            mode="sos", slice_chips=16),
+                   use_calibration=False),
+        build_pool(PoolSpec(name="cf", kind="elastic", chips=64,
+                            startup_s=2.0, price_multiplier=10.0),
+                   use_calibration=False),
+    ]
+    w = _work()
+    menu = price_menu(w, pools=pools)
+    probe = Query(work=w, sla=ServiceLevel.BEST_EFFORT, submit_time=0.0)
+    expect = {
+        p.name: p.cost_model.plan(w, p.effective_chips(probe))
+        for p in pools
+    }
+    # every level's exec/cost derives from the single probe's plans
+    assert menu[0].est_exec_s == min(pl.exec_time for pl in expect.values())
+    assert menu[2].est_cost == \
+        expect["r"].chip_seconds * pools[0].price_per_chip_s
+    assert menu[1].as_dict() == {**menu[2].as_dict(),
+                                 "sla": "relaxed",
+                                 "est_pending_s": 300.0}
+
+
+# ---------------------------------------------------------------------------
+# drift-gated admission control
+# ---------------------------------------------------------------------------
+
+def _feed(table, ratio, n=5):
+    for _ in range(n):
+        table.observe_drift(1.0, ratio)
+
+
+def test_drift_ewma_semantics():
+    t = CalibrationTable(drift_bound=0.25, drift_min_samples=4)
+    v0 = t.version
+    assert t.drift_ratio() is None and not t.drift_exceeded()
+    _feed(t, 2.0, n=3)
+    assert t.drift_ratio() == pytest.approx(2.0)
+    assert not t.drift_exceeded()  # below min_samples
+    _feed(t, 2.0, n=1)
+    assert t.drift_exceeded()
+    assert t.version == v0  # drift gates admission, never rescales plans
+    t.reset_drift()
+    assert t.drift_samples() == 0 and not t.drift_exceeded()
+    # unarmed table never trips regardless of evidence
+    u = CalibrationTable()
+    _feed(u, 3.0, n=10)
+    assert not u.drift_exceeded()
+
+
+def test_drift_fields_roundtrip_only_when_armed():
+    plain = CalibrationTable()
+    assert "drift_bound" not in plain.as_dict()  # legacy payload intact
+    armed = CalibrationTable(drift_bound=0.3, drift_alpha=0.5,
+                             drift_min_samples=2)
+    back = CalibrationTable.from_dict(armed.as_dict())
+    assert (back.drift_bound, back.drift_alpha, back.drift_min_samples) \
+        == (0.3, 0.5, 2)
+
+
+def _two_pool_coord(drift_action="reprice"):
+    slow = build_pool(
+        PoolSpec(name="slow", kind="reserved", chips=64, mode="sos",
+                 slice_chips=16, speed_factor=0.9, drift_bound=0.25,
+                 drift_action=drift_action),
+        use_calibration=False,
+    )
+    honest = build_pool(
+        PoolSpec(name="honest", kind="reserved", chips=64, mode="sos",
+                 slice_chips=16, speed_factor=0.5),
+        use_calibration=False,
+    )
+    coord = QueryCoordinator([slow, honest], policy=Policy.AUTO,
+                             cfg=SLAConfig())
+    return slow, honest, coord
+
+
+def test_coordinator_reprices_drifted_quotes():
+    slow, honest, coord = _two_pool_coord()
+    q = _mk(ServiceLevel.IMMEDIATE, 0.0)
+    # gate armed but not tripped: the (lying) faster quote wins
+    assert coord.route(q, 0.0) == "slow"
+    # the pool measures 3x slower than it quotes -> gate trips; its
+    # repriced quote loses to the honestly-slower pool
+    _feed(slow.cost_model.calibration, 3.0)
+    q2 = _mk(ServiceLevel.IMMEDIATE, 1.0)
+    assert coord.route(q2, 1.0) == "honest"
+    assert coord.drift_reprices >= 1
+    assert coord.drift_rejects == 0
+
+
+def test_coordinator_rejects_drifted_pool_while_alternatives_remain():
+    slow, honest, coord = _two_pool_coord(drift_action="reject")
+    _feed(slow.cost_model.calibration, 3.0)
+    q = _mk(ServiceLevel.IMMEDIATE, 0.0)
+    assert coord.route(q, 0.0) == "honest"
+    assert coord.drift_rejects >= 1
+
+
+def test_rejected_only_pool_falls_back_to_reprice():
+    """Admission control reroutes; it never strands a query."""
+    only = build_pool(
+        PoolSpec(name="only", kind="reserved", chips=64, mode="sos",
+                 slice_chips=16, drift_bound=0.25, drift_action="reject"),
+        use_calibration=False,
+    )
+    coord = QueryCoordinator([only], policy=Policy.AUTO, cfg=SLAConfig())
+    _feed(only.cost_model.calibration, 3.0)
+    q = _mk(ServiceLevel.IMMEDIATE, 0.0)
+    assert coord.route(q, 0.0) == "only"
+
+
+def test_build_pool_drift_action_validated():
+    with pytest.raises(ValueError):
+        build_pool(PoolSpec(name="x", drift_action="explode"),
+                   use_calibration=False)
+
+
+def test_build_pool_arms_drift_gate():
+    spec = PoolSpec(name="x", kind="reserved", drift_bound=0.3)
+    pool = build_pool(spec, use_calibration=False)
+    assert pool.cost_model.calibration.drift_bound == 0.3
+    # an injected table's own bound wins over the spec's
+    injected = CalibrationTable(drift_bound=0.1)
+    pool2 = build_pool(spec, use_calibration=False, calibration=injected)
+    assert pool2.cost_model.calibration is injected
+    assert injected.drift_bound == 0.1
+    # an injected unarmed table gets the spec's bound
+    bare = CalibrationTable()
+    build_pool(spec, use_calibration=False, calibration=bare)
+    assert bare.drift_bound == 0.3
+
+
+def test_sim_counts_drift_interventions_and_observer_feeds_walls():
+    table = CalibrationTable(drift_bound=0.25)
+    _feed(table, 2.0)  # pool declared 2x wrong, measured pre-day
+    assert table.drift_exceeded()
+    cfg = SimConfig(policy=Policy.LATENCY_AWARE, use_calibration=False,
+                    pools=default_pool_specs(),
+                    calibrations={"vm": table})
+    res = Simulation(cfg).run(generate(horizon_s=1800, seed=7))
+    assert res.drift_reprices >= 1
+    s = res.summary()
+    assert s["drift_reprices"] == res.drift_reprices
+    assert s["drift_rejects"] == res.drift_rejects == 0
+    # the day's own stage walls fed the EWMA (the observer is wired)
+    assert table.drift_samples() > 5
+
+
+def test_sim_without_drift_gate_reports_zero():
+    res = Simulation(SimConfig(use_calibration=False)).run(
+        generate(horizon_s=600, seed=1)
+    )
+    assert res.drift_reprices == 0 and res.drift_rejects == 0
+    assert res.summary()["drift_reprices"] == 0
