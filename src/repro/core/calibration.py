@@ -249,7 +249,9 @@ def _load_default_factor(arch: str, kind: str) -> float:
         an = _analytic_step(cfg, _SHAPE_TOKENS[shape], kind,
                             chips=rec["chips"])
         return _clamp(terms["step_s"] / an, *FACTOR_BOUNDS) if an else 1.0
-    except Exception:
+    except (OSError, json.JSONDecodeError, KeyError, TypeError, ValueError,
+            ZeroDivisionError):
+        # malformed/partial dry-run record: the declared constant stands
         return 1.0
 
 
@@ -326,23 +328,31 @@ def fit_dryruns(
     dryrun_dir = Path(dryrun_dir)
     ratios: dict[tuple[str, str], list[float]] = {}
     n_records = 0
+    # files silently dropped used to be invisible (the RL004 bug shape:
+    # a fit quietly computed from fewer records than the caller shipped);
+    # now every skip is named with its reason in the table's source
+    skipped: list[str] = []
     for p in sorted(dryrun_dir.glob("*.json")):
         try:
             rec = json.loads(p.read_text())
-        except (OSError, json.JSONDecodeError):
+        except (OSError, json.JSONDecodeError) as err:
+            skipped.append(f"{p.name}: unreadable ({type(err).__name__})")
             continue
         if not _record_matches_hw(rec, p.name, hw_tag):
-            continue
+            continue  # intentional filter, not a skip worth surfacing
         parsed = _parse_dryrun_record(rec)
         if parsed is None:
+            skipped.append(f"{p.name}: unrecognized record shape")
             continue
         arch, kind, chips, tokens, step_s = parsed
         try:
             cfg = get_config(arch)
         except KeyError:
+            skipped.append(f"{p.name}: unknown arch {arch!r}")
             continue
         an = _analytic_step(cfg, tokens, kind, chips=chips, hw=hw)
         if an <= 0:
+            skipped.append(f"{p.name}: non-positive analytic step")
             continue
         ratios.setdefault((arch, kind), []).append(step_s / an)
         n_records += 1
@@ -364,7 +374,9 @@ def fit_dryruns(
         speed_factor=speed,
         source=f"dryrun:{dryrun_dir}"
         + (f"#{hw_tag}" if hw_tag else "")
-        + f" ({n_records} records)",
+        + f" ({n_records} records)"
+        + (f" [skipped {len(skipped)}: " + "; ".join(skipped) + "]"
+           if skipped else ""),
     )
     return table
 
@@ -401,6 +413,13 @@ class LiveCalibrator:
     #: relative speed change below which a hot swap is skipped (avoids
     #: re-planning every pool on sub-permille EWMA wiggle)
     APPLY_EPSILON = 1e-3
+
+    #: lock contract (reprolint RL001 + repro.core.sanitize).
+    _GUARDED_BY = {
+        "_state": "_mu",
+        "_tables": "_mu",
+        "_refs": "_mu",
+    }
 
     def __init__(
         self,

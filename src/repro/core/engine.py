@@ -60,6 +60,7 @@ from typing import Callable, NamedTuple, Optional
 
 import numpy as np
 
+from . import sanitize
 from .cost_model import CostModel, Stage, StagePlan
 from .query import Query
 from .sla import ServiceLevel
@@ -67,6 +68,8 @@ from .sla import ServiceLevel
 #: when true, every ``advance_to`` re-derives the backlog with the full
 #: O(running + waiting) scan and asserts it matches the incremental
 #: counter — the equivalence lock the hypothesis suite runs under.
+#: ``REPRO_SANITIZE=1`` (core/sanitize.py) implies it per-pool via the
+#: executor's ``sanitize`` flag without flipping this global.
 DEBUG_BACKLOG = os.environ.get("REPRO_DEBUG_BACKLOG", "") == "1"
 
 _BOE = int(ServiceLevel.BEST_EFFORT)
@@ -294,6 +297,11 @@ class ClusterExecutor:
         self.fault = fault
         self.rng = rng or np.random.default_rng(0)
         self.price_per_chip_s = price_per_chip_s
+        #: one-switch runtime sanitizer (core/sanitize.py): when set,
+        #: every advance_to re-checks the backlog and heap invariants,
+        #: exactly as DEBUG_BACKLOG does globally. Observers only —
+        #: results are bit-identical either way.
+        self.sanitize = sanitize.enabled()
         # insertion-ordered for deterministic iteration, O(1) removal
         self.running: dict[_Run, None] = {}
         self.waiting: list[Query] = WaitingQueue(self)
@@ -749,8 +757,10 @@ class ClusterExecutor:
         # (autoscale trigger re-evaluation at this event's `now`)
         if self.needs_tick:
             self._admit(now)
-        if DEBUG_BACKLOG:
+        if DEBUG_BACKLOG or self.sanitize:
             self.check_backlog_invariant(now)
+            if self.sanitize:
+                self.check_heap_invariant()
         return finished
 
     #: subclasses with shared-rate dynamics (POS) set this so the hot

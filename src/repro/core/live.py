@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from ..configs import get_config
 from ..models.transformer import LM
+from . import sanitize
 from .cost_model import CostModel
 from .engine import ClusterExecutor, account_stage
 from .pools import (
@@ -91,6 +92,15 @@ class _ModelPool:
     so no stage wall-clock ever includes XLA compile time (the
     first-query billing skew of the old engine). Compile seconds are
     recorded per shape in ``compile_s`` for observability."""
+
+    #: lock contract — enforced statically by reprolint RL001 and at
+    #: runtime by repro.core.sanitize (REPRO_SANITIZE=1); one registry
+    #: feeds both, so the checks cannot drift apart.
+    _GUARDED_BY = {
+        "_models": "_lock",
+        "_warm": "_lock",
+        "compile_s": "_lock",
+    }
 
     def __init__(self, prompt_tokens: int, decode_tokens: int):
         self.prompt_tokens = prompt_tokens
@@ -171,6 +181,14 @@ class LiveExecutor(ClusterExecutor):
     ``_mu`` — counters are moved inside one critical section per
     transition, so ``run_queue_len`` can never transiently under- or
     over-count (the old engine's unlocked ``_vm_busy`` race)."""
+
+    #: holding ``_cv`` implies holding ``_mu`` (the Condition wraps it);
+    #: reprolint RL001 + repro.core.sanitize both read this registry.
+    _GUARDED_BY = {
+        "running": ("_mu", "_cv"),
+        "waiting": ("_mu", "_cv"),
+        "stages_completed": ("_mu", "_cv"),
+    }
 
     def __init__(self, spec: PoolSpec, engine: "LiveEngine"):
         price = (
@@ -427,6 +445,9 @@ class LiveReservedPool(LiveExecutor):
             self._cv.notify_all()
 
     def _pop_waiting_locked(self) -> Query:
+        # static RL001 exempts *_locked helpers; the runtime guard
+        # covers their CALLERS instead (REPRO_SANITIZE=1)
+        sanitize.guard(self, "waiting")
         # slice handoff mirrors the simulator: IMMEDIATE first, FIFO
         # within a level — a resumed preempted query keeps its place
         best = min(
@@ -567,6 +588,14 @@ class LiveEngine:
     same schedulers, same QueryCoordinator, same PoolSpec registry —
     driving real jitted models instead of a cost model."""
 
+    #: lock contract (reprolint RL001 + repro.core.sanitize).
+    _GUARDED_BY = {
+        "done": "_lock",
+        "failed": "_lock",
+        "service": "_lock",
+        "_ckpt": "_ckpt_mu",
+    }
+
     def __init__(self, cfg: LiveConfig):
         self.cfg = cfg
         self.models = _ModelPool(cfg.prompt_tokens, cfg.decode_tokens)
@@ -706,7 +735,12 @@ class LiveEngine:
             time.sleep(0.02)
         self.shutdown()
         with self._lock:
-            return list(self.done) + list(self.failed)
+            out = list(self.done) + list(self.failed)
+        if sanitize.enabled():
+            # conservation + trace stitching over completed queries only
+            # (failed ones may have partial traces mid-stage)
+            sanitize.check_result([q for q in out if q.state == "done"])
+        return out
 
     def shutdown(self) -> None:
         self._stop.set()

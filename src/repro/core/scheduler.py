@@ -260,6 +260,9 @@ class CrossPoolFusionIndex:
     Thread-safe: live pools (core/live.py) mutate their waiting queues
     from worker threads and share this index with the coordinator."""
 
+    #: lock contract (reprolint RL001 + repro.core.sanitize).
+    _GUARDED_BY = {"_buckets": "_lock"}
+
     def __init__(self):
         self._lock = threading.Lock()
         # key -> {query: pool}; dict preserves insertion order, so FIFO

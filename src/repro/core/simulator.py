@@ -22,6 +22,7 @@ from typing import Iterable, Optional
 
 import numpy as np
 
+from . import sanitize
 from .clusters import AutoscaleConfig, FaultModel
 from .engine import StageEvent
 from .insights import cluster_shares
@@ -71,6 +72,12 @@ class SimConfig:
     #: per-heap-pop loop — the equivalence oracle tests/test_vectorized.py
     #: locks the drain against (also: REPRO_SCALAR_CORE=1)
     scalar_core: bool = False
+    #: one-switch runtime sanitizer (core/sanitize.py): per-advance
+    #: backlog/heap invariant checks plus post-run chip-second
+    #: conservation and trace-stitching asserts. None defers to the
+    #: REPRO_SANITIZE=1 environment switch; results are bit-identical
+    #: with the sanitizer on or off (CI's sanitize-smoke proves it).
+    sanitize: Optional[bool] = None
 
 
 @dataclass
@@ -194,6 +201,11 @@ class Simulation:
             )
             for spec in specs
         ]
+        # explicit SimConfig.sanitize overrides the env snapshot the
+        # executors were built with; None keeps REPRO_SANITIZE's word
+        if cfg.sanitize is not None:
+            for pool in self.pools:
+                pool.sanitize = cfg.sanitize
         self.coordinator = QueryCoordinator(
             self.pools, policy=cfg.policy, cfg=cfg.sla,
             cross_pool_fusion=cfg.fuse_queries and cfg.cross_pool_fusion,
@@ -426,6 +438,11 @@ class Simulation:
         expanded: list[Query] = []
         for q in finished:
             expanded.extend(unpack_fused(q))
+        if cfg.sanitize or (cfg.sanitize is None and sanitize.enabled()):
+            # post-run conservation + trace-stitching asserts over the
+            # unpacked population (fused members share one trace object;
+            # check_result dedups by identity)
+            sanitize.check_result(expanded)
         return SimResult(
             expanded, cfg,
             drift_reprices=self.coordinator.drift_reprices,

@@ -89,14 +89,14 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, variant: str = "baseline
         rec["skip_reason"] = why
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     # 1) FULL program: sharding-coherence proof + memory + collective schedule
     prog, compiled = _compile_cell(arch, shape, mesh, variant=variant, **build_kw)
     rec["full"] = {
         "memory": _mem_stats(compiled),
         "cost_analysis_rolled": _cost(compiled),
         "collectives": collective_summary(compiled.as_text(), chips),
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(time.perf_counter() - t0, 1),
     }
     hbm = rec["full"]["memory"]
     per_dev = sum(
@@ -113,7 +113,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, variant: str = "baseline
     # 2) depth differencing with unrolled scans: accurate per-step totals.
     # microbatches=1 here: totals are scheduling-invariant, and a rolled
     # microbatch loop would be counted once by cost_analysis.
-    t1 = time.time()
+    t1 = time.perf_counter()
     _, c1 = _compile_cell(arch, shape, mesh, depth_supers=1, unroll=True,
                           variant=variant, microbatches=1, **build_kw)
     _, c2 = _compile_cell(arch, shape, mesh, depth_supers=2, unroll=True,
@@ -159,7 +159,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, variant: str = "baseline
         "model_flops": model_flops,
         "hlo_flops_global": hlo_flops_global,
         "useful_ratio": model_flops / hlo_flops_global if hlo_flops_global else 0.0,
-        "diff_compile_s": round(time.time() - t1, 1),
+        "diff_compile_s": round(time.perf_counter() - t1, 1),
     }
     rec["status"] = "ok"
     return rec
@@ -198,7 +198,7 @@ def main():
             if path.exists() and not args.force:
                 print(f"cached   {path.name}")
                 continue
-            t0 = time.time()
+            t0 = time.perf_counter()
             try:
                 rec = run_cell(
                     arch, cell.name, multi_pod=mp, variant=args.variant,
@@ -223,7 +223,7 @@ def main():
                 )
             print(
                 f"{status:8s} {arch} {cell.name} {mesh_name}"
-                f" ({time.time()-t0:.0f}s){extra}",
+                f" ({time.perf_counter()-t0:.0f}s){extra}",
                 flush=True,
             )
     if failures:

@@ -161,7 +161,7 @@ def main():
         )
         for i in range(args.requests)
     ]
-    t0 = time.time()
+    t0 = time.perf_counter()
     eng.run(reqs)
     for r in reqs:
         lat = (r.finish_t or 0) - r.submit_t
@@ -169,7 +169,7 @@ def main():
             f"req {r.rid} sla={r.sla.short} latency={lat:6.2f}s"
             f" tokens={len(r.out_tokens)} first={r.out_tokens[:4]}"
         )
-    print(f"[serve] {len(reqs)} requests in {time.time()-t0:.1f}s")
+    print(f"[serve] {len(reqs)} requests in {time.perf_counter()-t0:.1f}s")
 
 
 if __name__ == "__main__":

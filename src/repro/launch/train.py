@@ -89,7 +89,7 @@ def train(
     jitted = jax.jit(step_fn, **jit_kw)
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     ctx = sharding_ctx(mesh, TRAIN_RULES) if mesh is not None else None
     for i in range(start, steps):
         if i == fail_at:
@@ -107,7 +107,7 @@ def train(
             print(
                 f"[train] step {i+1}/{steps} loss={loss:.4f}"
                 f" gnorm={float(metrics['grad_norm']):.3f}"
-                f" ({(time.time()-t0)/max(1,i+1-start):.2f}s/step)"
+                f" ({(time.perf_counter()-t0)/max(1,i+1-start):.2f}s/step)"
             )
         if (i + 1) % ckpt_every == 0 or (i + 1) == steps:
             store.save(

@@ -1,0 +1,355 @@
+"""Every reprolint rule demonstrated against seeded regressions —
+including re-introducing the PR-3 ``_vm_busy`` unguarded access and a
+version-less memo — plus suppression semantics, the baseline ratchet,
+and a self-check that the repo itself is clean against the committed
+baseline."""
+from pathlib import Path
+
+import pytest
+
+from tools.reprolint import (
+    META_CODE,
+    apply_baseline,
+    baseline_counts,
+    lint_paths,
+    lint_text,
+    load_baseline,
+    save_baseline,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+CORE = "src/repro/core/fixture.py"  # path chosen to put rules in scope
+
+
+def codes(src: str, path: str = CORE) -> list[str]:
+    return [f.code for f in lint_text(src, path)]
+
+
+# --- RL001: lock discipline (the PR-3 _vm_busy race) ----------------------
+
+VM_BUSY_REGRESSION = '''
+import threading
+
+class VMCluster:
+    _GUARDED_BY = {"_vm_busy": "_lock"}
+
+    def __init__(self):
+        self._vm_busy = 0
+        self._lock = threading.Lock()
+
+    def start(self, q):
+        self._vm_busy += 1  # the PR-3 bug, verbatim shape
+'''
+
+
+def test_rl001_catches_vm_busy_regression():
+    findings = lint_text(VM_BUSY_REGRESSION, CORE)
+    assert [f.code for f in findings] == ["RL001"]
+    assert "_vm_busy" in findings[0].message
+    assert findings[0].line == 12
+
+
+def test_rl001_with_lock_and_locked_suffix_pass():
+    src = '''
+class VMCluster:
+    _GUARDED_BY = {"_vm_busy": "_lock"}
+    def start(self, q):
+        with self._lock:
+            self._vm_busy += 1
+    def _start_locked(self, q):
+        self._vm_busy += 1
+'''
+    assert codes(src) == []
+
+
+def test_rl001_init_exempt_but_other_methods_are_not():
+    src = '''
+class C:
+    _GUARDED_BY = {"x": "_lock"}
+    def __init__(self):
+        self.x = 0
+    def poke(self):
+        return self.x
+'''
+    findings = lint_text(src, CORE)
+    assert [f.code for f in findings] == ["RL001"]
+    assert findings[0].line == 7
+
+
+def test_rl001_nested_function_loses_the_lock():
+    # a closure runs AFTER the with-block exits: the exact shape the
+    # old engine's executor futures had
+    src = '''
+class C:
+    _GUARDED_BY = {"x": "_lock"}
+    def defer(self):
+        with self._lock:
+            return lambda: self.x
+'''
+    assert codes(src) == ["RL001"]
+
+
+def test_rl001_condition_alias_and_inherited_registry():
+    src = '''
+class Base:
+    _GUARDED_BY = {"waiting": ("_mu", "_cv")}
+
+class Pool(Base):
+    def ok(self):
+        with self._cv:
+            return self.waiting
+    def bad(self):
+        return self.waiting
+'''
+    findings = lint_text(src, CORE)
+    assert [(f.code, f.line) for f in findings] == [("RL001", 10)]
+
+
+# --- RL002: version-keyed caches (PR-4 / PR-7 bug classes) ----------------
+
+def test_rl002_catches_versionless_memo():
+    src = '''
+class Planner:
+    def __init__(self):
+        self._plan_cache = {}
+    def plan(self, key):
+        if key not in self._plan_cache:
+            self._plan_cache[key] = object()
+        return self._plan_cache[key]
+'''
+    assert codes(src) == ["RL002"]
+
+
+def test_rl002_catches_unbounded_lru_cache():
+    src = '''
+import functools
+
+@functools.lru_cache(maxsize=None)
+def default_table():
+    return object()
+'''
+    assert codes(src) == ["RL002"]
+    # the PR-4 fix shape — bounded — passes
+    assert codes(src.replace("maxsize=None", "maxsize=8")) == []
+
+
+def test_rl002_eviction_or_version_key_passes():
+    evicting = '''
+class Planner:
+    def __init__(self):
+        self._plan_cache = {}
+    def plan(self, key):
+        if len(self._plan_cache) > 4096:
+            self._plan_cache.clear()
+        return self._plan_cache.setdefault(key, object())
+'''
+    versioned = '''
+class Planner:
+    def __init__(self):
+        self._plan_cache = {}
+    def plan(self, key, table):
+        return self._plan_cache[(key, table.version)]
+'''
+    assert codes(evicting) == []
+    assert codes(versioned) == []
+
+
+def test_rl002_scoped_to_core():
+    src = "class C:\n    def __init__(self):\n        self._cache = {}\n"
+    assert codes(src, "benchmarks/fixture.py") == []
+
+
+# --- RL003: determinism ---------------------------------------------------
+
+def test_rl003_wall_clock_and_global_rng():
+    src = '''
+import time
+import random
+
+def f():
+    t0 = time.time()
+    return time.perf_counter() - t0
+'''
+    got = codes(src, "src/repro/launch/fixture.py")
+    assert got == ["RL003", "RL003"]  # import random + time.time
+
+
+def test_rl003_np_random_global_vs_generator():
+    src = '''
+import numpy as np
+
+def f():
+    bad = np.random.rand(3)
+    rng = np.random.default_rng(0)
+    return bad, rng.random(3)
+'''
+    assert codes(src) == ["RL003"]
+
+
+def test_rl003_np_sum_and_set_iteration_in_core_only():
+    src = '''
+import numpy as np
+
+def f(xs, pools):
+    total = np.sum(xs)
+    alive = {p for p in pools}
+    for p in alive:
+        total += p.burn
+    for p in sorted(alive):
+        total += p.burn
+    return total, xs.sum()
+'''
+    assert codes(src) == ["RL003", "RL003"]  # np.sum + bare-set loop
+    # launch scripts: wall-clock rules apply, bit-identity rules don't
+    assert codes(src, "src/repro/launch/fixture.py") == []
+
+
+# --- RL004: swallowed exceptions ------------------------------------------
+
+def test_rl004_catches_swallowed_and_accepts_handled():
+    swallowed = '''
+def f():
+    try:
+        work()
+    except Exception:
+        return None
+'''
+    assert codes(swallowed) == ["RL004"]
+    for handled in (
+        "raise",
+        "q.error = err",
+        "self._fail(q, err)",
+    ):
+        src = f'''
+def f(self, q):
+    try:
+        work()
+    except Exception as err:
+        {handled}
+'''
+        assert codes(src) == [], handled
+    narrow = '''
+def f():
+    try:
+        work()
+    except ValueError:
+        return None
+'''
+    assert codes(narrow) == []
+
+
+# --- RL005: slots / identity ----------------------------------------------
+
+def test_rl005_query_module_requires_slots_and_identity():
+    path = "src/repro/core/query.py"
+    unslotted = "class Query:\n    pass\n"
+    assert [f.code for f in lint_text(unslotted, path)] == ["RL005"]
+    eq_override = '''
+from dataclasses import dataclass
+
+@dataclass(eq=False, slots=True)
+class Query:
+    qid: int
+    def __eq__(self, other):
+        return self.qid == other.qid
+'''
+    assert [f.code for f in lint_text(eq_override, path)] == ["RL005"]
+    good = '''
+from dataclasses import dataclass
+
+@dataclass(eq=False, slots=True)
+class Query:
+    qid: int
+'''
+    assert lint_text(good, path) == []
+
+
+def test_rl005_named_hot_classes_anywhere_in_core():
+    src = "class WaitingQueue:\n    pass\n"
+    assert codes(src) == ["RL005"]
+    assert codes('class WaitingQueue:\n    __slots__ = ("_q",)\n') == []
+    # NamedTuple counts as slotted
+    src = "from typing import NamedTuple\nclass StageEvent(NamedTuple):\n    qid: int\n"
+    assert codes(src) == []
+
+
+# --- suppressions and the RL000 meta rule ---------------------------------
+
+def test_suppression_requires_reason():
+    with_reason = (
+        "import random  "
+        "# reprolint: disable=RL003 -- fixture: demo jitter only\n"
+    )
+    assert codes(with_reason) == []
+    reasonless = "import random  # reprolint: disable=RL003\n"
+    got = codes(reasonless)
+    assert got == [META_CODE, "RL003"]  # disable rejected AND rule fires
+
+
+def test_suppression_only_silences_named_code():
+    src = (
+        "import random  "
+        "# reprolint: disable=RL001 -- wrong code on purpose\n"
+    )
+    assert codes(src) == ["RL003"]
+
+
+# --- baseline ratchet -----------------------------------------------------
+
+def test_baseline_round_trip_and_ratchet(tmp_path):
+    findings = lint_text(VM_BUSY_REGRESSION, CORE)
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, findings)
+    loaded = load_baseline(bl)
+    assert loaded == baseline_counts(findings) == {f"{CORE}::RL001": 1}
+    # grandfathered hit passes...
+    assert apply_baseline(findings, loaded) == []
+    # ...but a SECOND occurrence of the same (file, rule) fails
+    assert len(apply_baseline(findings * 2, loaded)) == 1
+
+
+def test_rl000_is_never_baselinable(tmp_path):
+    findings = lint_text(
+        "import random  # reprolint: disable=RL003\n", CORE
+    )
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, findings)
+    left = apply_baseline(findings, load_baseline(bl))
+    assert [f.code for f in left] == [META_CODE]
+
+
+# --- the repo itself is clean against the committed baseline --------------
+
+def test_repo_is_clean_against_committed_baseline():
+    findings = lint_paths(["src", "tests", "benchmarks"], root=REPO)
+    baseline = load_baseline(REPO / "tools" / "reprolint" / "baseline.json")
+    left = apply_baseline(findings, baseline)
+    assert left == [], "\n".join(f.render() for f in left)
+
+
+def test_committed_baseline_is_empty_for_core():
+    baseline = load_baseline(REPO / "tools" / "reprolint" / "baseline.json")
+    core_keys = [k for k in baseline if k.startswith("src/repro/core/")]
+    assert core_keys == []
+
+
+def test_cli_exit_codes(tmp_path):
+    from tools.reprolint.__main__ import main
+
+    bad = tmp_path / "src" / "repro" / "core"
+    bad.mkdir(parents=True)
+    (bad / "fixture.py").write_text(VM_BUSY_REGRESSION)
+    rel = ["src/repro/core/fixture.py"]
+    assert main([*rel, "--root", str(tmp_path)]) == 1
+    bl = tmp_path / "bl.json"
+    assert main([*rel, "--root", str(tmp_path),
+                 "--write-baseline", str(bl)]) == 0
+    assert main([*rel, "--root", str(tmp_path), "--baseline", str(bl)]) == 0
+
+
+def test_syntax_error_is_a_finding():
+    assert codes("def broken(:\n") == [META_CODE]
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

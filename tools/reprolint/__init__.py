@@ -1,0 +1,175 @@
+"""reprolint: AST-based invariant lints for this repo's correctness contracts.
+
+Every rule encodes a bug class this repo has actually shipped and fixed
+(docs/static-analysis.md has the catalog):
+
+  RL001  lock discipline     — the PR-3 ``_vm_busy`` data race
+  RL002  version-keyed caches — the PR-4 stale ``lru_cache`` / PR-7
+                                unbounded plan-cache classes
+  RL003  determinism          — wall-clock time, global RNG, pairwise
+                                ``np.sum`` drift, bare-set iteration
+  RL004  swallowed exceptions — the PR-3 swallowed-futures class
+  RL005  slots / identity     — hot-path classes stay slotted, with
+                                identity equality
+
+Self-contained on the stdlib (``ast`` + ``tokenize``-free line scanning):
+``python -m tools.reprolint [paths...] [--baseline FILE]``.
+
+Inline suppression: ``# reprolint: disable=RL003 -- <reason>`` on the
+flagged line. The reason is REQUIRED — a reasonless disable is itself a
+finding (RL000), so every grandfathered hit carries its review rationale
+in the source.
+
+Baseline: a JSON map of ``"path::code" -> count`` (``--write-baseline``).
+Lint passes while per-(file, rule) finding counts stay at or below the
+baselined counts — a ratchet that can only tighten.
+
+The RL001 rule and the runtime sanitizer (``repro.core.sanitize``,
+``REPRO_SANITIZE=1``) read the SAME ``_GUARDED_BY`` class registries, so
+the static race check and the runtime lock-held asserts cannot drift
+apart.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Optional
+
+META_CODE = "RL000"
+
+_DISABLE_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Z0-9,\s]+?)\s*(?:--\s*(\S.*))?$"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str  # repo-relative posix path
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _suppressions(text: str) -> tuple[dict[int, set[str]], list[int]]:
+    """(line -> disabled codes, lines with a reasonless disable). The
+    reason string after ``--`` is mandatory: a suppression is a reviewed
+    decision, and the review lives in the source next to it."""
+    disabled: dict[int, set[str]] = {}
+    reasonless: list[int] = []
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _DISABLE_RE.search(line)
+        if m is None:
+            continue
+        codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+        if not m.group(2):
+            reasonless.append(i)
+            continue
+        disabled[i] = codes
+    return disabled, reasonless
+
+
+def lint_text(text: str, path: str) -> list[Finding]:
+    """Lint one file's source under its repo-relative ``path`` (the path
+    decides which rules are in scope). Returns unsuppressed findings."""
+    from . import rules
+
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as err:
+        return [Finding(path, err.lineno or 1, META_CODE,
+                        f"syntax error: {err.msg}")]
+    disabled, reasonless = _suppressions(text)
+    findings: list[Finding] = [
+        Finding(path, line, META_CODE,
+                "reprolint disable comment requires a reason: "
+                "'# reprolint: disable=CODE -- <why this is safe>'")
+        for line in reasonless
+    ]
+    for rule in rules.RULES:
+        if not rule.applies(path):
+            continue
+        for f in rule.check(tree, path):
+            if rule.code in disabled.get(f.line, ()):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+def iter_py_files(paths: Iterable[str], root: Path) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        target = (root / p) if not Path(p).is_absolute() else Path(p)
+        if target.is_file() and target.suffix == ".py":
+            out.append(target)
+        elif target.is_dir():
+            out.extend(
+                f for f in sorted(target.rglob("*.py"))
+                if "__pycache__" not in f.parts
+                and not any(part.startswith(".") for part in f.parts)
+            )
+    return out
+
+
+def lint_paths(paths: Iterable[str], root: Optional[Path] = None) -> list[Finding]:
+    """Lint every ``.py`` file under ``paths`` (files or directories),
+    reporting findings with paths relative to ``root`` (default: cwd)."""
+    root = Path.cwd() if root is None else Path(root)
+    findings: list[Finding] = []
+    for f in iter_py_files(paths, root):
+        try:
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        findings.extend(lint_text(f.read_text(), rel))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+# --- baseline: a per-(file, rule) count ratchet ---------------------------
+
+def baseline_counts(findings: Iterable[Finding]) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for f in findings:
+        key = f"{f.path}::{f.code}"
+        counts[key] = counts.get(key, 0) + 1
+    return counts
+
+
+def load_baseline(path) -> dict[str, int]:
+    d = json.loads(Path(path).read_text())
+    entries = d.get("entries", d) if isinstance(d, dict) else {}
+    return {str(k): int(v) for k, v in entries.items()}
+
+
+def save_baseline(path, findings: Iterable[Finding]) -> None:
+    payload = {"entries": baseline_counts(findings)}
+    Path(path).write_text(
+        json.dumps(payload, indent=1, sort_keys=True) + "\n"
+    )
+
+
+def apply_baseline(
+    findings: list[Finding], baseline: dict[str, int]
+) -> list[Finding]:
+    """Findings NOT covered by the baseline: for each (file, rule) the
+    first ``baseline[key]`` findings are grandfathered, the rest
+    reported. ``RL000`` (meta: malformed suppression) is never
+    baselinable — a reasonless disable must be fixed, not ratcheted."""
+    remaining = dict(baseline)
+    out: list[Finding] = []
+    for f in findings:
+        key = f"{f.path}::{f.code}"
+        if f.code != META_CODE and remaining.get(key, 0) > 0:
+            remaining[key] -= 1
+            continue
+        out.append(f)
+    return out

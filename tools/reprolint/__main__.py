@@ -1,0 +1,64 @@
+"""CLI: ``python -m tools.reprolint [paths...] [--baseline FILE]``.
+
+Exit 0 when every finding is covered by the baseline (or there are
+none); exit 1 otherwise, printing one ``path:line: CODE message`` per
+finding. ``--write-baseline`` regenerates the ratchet file from the
+current findings instead of failing.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import apply_baseline, lint_paths, load_baseline, save_baseline
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-native invariant lints (RL001-RL005)",
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=["src", "tests", "benchmarks"],
+        help="files or directories to lint (default: src tests benchmarks)",
+    )
+    ap.add_argument(
+        "--root", default=None,
+        help="repo root findings are reported relative to (default: cwd)",
+    )
+    ap.add_argument(
+        "--baseline", default=None,
+        help="JSON baseline of grandfathered per-(file, rule) counts",
+    )
+    ap.add_argument(
+        "--write-baseline", default=None, metavar="FILE",
+        help="write the current findings as the new baseline and exit 0",
+    )
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root else Path.cwd()
+    findings = lint_paths(args.paths or ["src", "tests", "benchmarks"], root)
+
+    if args.write_baseline:
+        save_baseline(args.write_baseline, findings)
+        print(
+            f"reprolint: baseline written to {args.write_baseline} "
+            f"({len(findings)} finding(s) grandfathered)"
+        )
+        return 0
+
+    if args.baseline:
+        findings = apply_baseline(findings, load_baseline(args.baseline))
+
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"reprolint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("reprolint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

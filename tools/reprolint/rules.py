@@ -1,0 +1,653 @@
+"""The five repo-native rules. Each encodes a bug class this repo has
+shipped and fixed; docs/static-analysis.md carries the full catalog with
+the historical incident behind every rule.
+
+Rules are plain objects with ``code``, ``applies(path)`` (repo-relative
+posix path scoping) and ``check(tree, path) -> list[Finding]``. All
+analysis is stdlib ``ast`` — no imports of the code under lint.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Optional
+
+from . import Finding
+
+CORE = "src/repro/core/"
+#: wall-clock / global-RNG scope: core, the launch scripts (their timing
+#: numbers feed calibration records), and the sharded sweep harness
+WALLCLOCK_SCOPE = (CORE, "src/repro/launch/", "benchmarks/sweep.py")
+#: float-summation / set-iteration scope: where bit-identical replay is
+#: a contract (docs/sweeps.md)
+DETERMINISM_SCOPE = (CORE, "benchmarks/sweep.py")
+#: RL005: whole-module slots/identity discipline
+HOT_MODULES = ("src/repro/core/query.py",)
+#: RL005: named hot-path classes checked wherever they live in core/
+HOT_CLASSES = {"_Run", "WaitingQueue", "PendingQueue", "StageEvent"}
+
+_CACHE_NAME_RE = re.compile(r"cache|memo", re.IGNORECASE)
+_VERSION_TOKEN_RE = re.compile(r"version|epoch|\bver\b", re.IGNORECASE)
+_NP_RANDOM_OK = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "Philox",
+}
+
+
+def _in(path: str, prefixes: Iterable[str]) -> bool:
+    return any(
+        path == p or (p.endswith("/") and path.startswith(p))
+        for p in prefixes
+    )
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """'x' when node is ``self.x``, else None."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# RL001 — lock discipline (the PR-3 ``_vm_busy`` data race)
+# ---------------------------------------------------------------------------
+
+class LockDiscipline:
+    """Attributes a class declares in its ``_GUARDED_BY`` registry may
+    only be touched (via ``self``) inside a ``with self.<lock>`` block
+    naming one of the declared locks, or inside a ``*_locked``-suffixed
+    method (whose callers the runtime sanitizer covers —
+    ``repro.core.sanitize`` reads the SAME registry). ``__init__`` /
+    ``__post_init__`` are exempt: state is built before threads exist.
+    Nested functions and lambdas are analyzed with NO locks held — they
+    run later, outside the enclosing critical section (exactly how the
+    old engine's futures dropped the lock the submitter held)."""
+
+    code = "RL001"
+    title = "guarded attribute accessed outside its lock"
+
+    def applies(self, path: str) -> bool:
+        return path.endswith(".py")
+
+    def check(self, tree: ast.Module, path: str) -> list[Finding]:
+        findings: list[Finding] = []
+        classes = {
+            n.name: n for n in tree.body if isinstance(n, ast.ClassDef)
+        }
+        registries: dict[str, dict[str, tuple[str, ...]]] = {}
+
+        def registry_of(name: str) -> dict[str, tuple[str, ...]]:
+            if name in registries:
+                return registries[name]
+            node = classes.get(name)
+            merged: dict[str, tuple[str, ...]] = {}
+            if node is not None:
+                for base in node.bases:  # same-module bases inherit
+                    if isinstance(base, ast.Name) and base.id in classes:
+                        merged.update(registry_of(base.id))
+                merged.update(_parse_registry(node))
+            registries[name] = merged
+            return merged
+
+        for name, node in classes.items():
+            reg = registry_of(name)
+            if not reg:
+                continue
+            for stmt in node.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._check_method(stmt, reg, path, findings)
+        return findings
+
+    def _check_method(
+        self,
+        fn: ast.AST,
+        reg: dict[str, tuple[str, ...]],
+        path: str,
+        findings: list[Finding],
+    ) -> None:
+        if fn.name in ("__init__", "__post_init__") or fn.name.endswith(
+            "_locked"
+        ):
+            return
+        self._walk(fn.body, frozenset(), reg, path, findings)
+
+    def _walk(self, nodes, held, reg, path, findings) -> None:
+        for node in (nodes if isinstance(nodes, list) else [nodes]):
+            attr = _self_attr(node)
+            if attr is not None and attr in reg:
+                if not (held & set(reg[attr])):
+                    findings.append(Finding(
+                        path, node.lineno, self.code,
+                        f"'self.{attr}' is declared guarded by "
+                        f"{'/'.join(reg[attr])} but accessed outside a "
+                        f"'with self.<lock>' block (and not in a "
+                        f"'*_locked' method)",
+                    ))
+                continue  # self.<attr> has no interesting children
+            if isinstance(node, ast.With):
+                acquired = set()
+                for item in node.items:
+                    a = _self_attr(item.context_expr)
+                    if a is not None:
+                        acquired.add(a)
+                    else:
+                        self._walk(item.context_expr, held, reg, path,
+                                   findings)
+                self._walk(node.body, held | acquired, reg, path, findings)
+                continue
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a nested def runs later: no lock from here is held then
+                self._walk(node.body, frozenset(), reg, path, findings)
+                continue
+            if isinstance(node, ast.Lambda):
+                self._walk(node.body, frozenset(), reg, path, findings)
+                continue
+            for child in ast.iter_child_nodes(node):
+                self._walk(child, held, reg, path, findings)
+
+
+def _parse_registry(cls: ast.ClassDef) -> dict[str, tuple[str, ...]]:
+    """The class's literal ``_GUARDED_BY = {"attr": "lock" | ("l1",
+    "l2")}`` dict, empty when absent or non-literal."""
+    for stmt in cls.body:
+        value = None
+        if isinstance(stmt, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "_GUARDED_BY"
+            for t in stmt.targets
+        ):
+            value = stmt.value
+        elif (
+            isinstance(stmt, ast.AnnAssign)
+            and isinstance(stmt.target, ast.Name)
+            and stmt.target.id == "_GUARDED_BY"
+        ):
+            value = stmt.value
+        if not isinstance(value, ast.Dict):
+            continue
+        reg: dict[str, tuple[str, ...]] = {}
+        for k, v in zip(value.keys, value.values):
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                continue
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                reg[k.value] = (v.value,)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                locks = tuple(
+                    e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                )
+                if locks:
+                    reg[k.value] = locks
+        return reg
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# RL002 — version-keyed caches (PR-4 stale lru_cache, PR-7 unbounded memo)
+# ---------------------------------------------------------------------------
+
+class VersionKeyedCaches:
+    """A dict used as a memo in core/ (name matching cache/memo) must
+    show eviction or bounding evidence in its class — ``.pop`` /
+    ``.popitem`` / ``.clear`` calls or a ``len(...)`` bound check — or
+    key/tag entries with a version token (``*version*`` / ``*epoch*``
+    in a subscript key). ``functools.cache`` and
+    ``lru_cache(maxsize=None)`` are unbounded and never invalidate:
+    always flagged (the PR-4 calibration bug was exactly such a cache
+    outliving the data it memoized)."""
+
+    code = "RL002"
+    title = "memo without eviction bound or version key"
+
+    def applies(self, path: str) -> bool:
+        return _in(path, (CORE,))
+
+    def check(self, tree: ast.Module, path: str) -> list[Finding]:
+        findings: list[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    bad = self._unbounded_decorator(dec)
+                    if bad:
+                        findings.append(Finding(
+                            path, dec.lineno, self.code,
+                            f"'{bad}' memoizes without bound or "
+                            f"invalidation; use a version-keyed or "
+                            f"evicting cache",
+                        ))
+        for scope in [tree] + [
+            n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)
+        ]:
+            findings.extend(self._check_scope(scope, path))
+        return findings
+
+    @staticmethod
+    def _unbounded_decorator(dec: ast.AST) -> Optional[str]:
+        def name_of(n):
+            if isinstance(n, ast.Name):
+                return n.id
+            if isinstance(n, ast.Attribute):
+                return n.attr
+            return None
+
+        if name_of(dec) == "cache":
+            return "functools.cache"
+        if isinstance(dec, ast.Call) and name_of(dec.func) == "lru_cache":
+            for kw in dec.keywords:
+                if kw.arg == "maxsize" and (
+                    isinstance(kw.value, ast.Constant)
+                    and kw.value.value is None
+                ):
+                    return "lru_cache(maxsize=None)"
+            if dec.args and (
+                isinstance(dec.args[0], ast.Constant)
+                and dec.args[0].value is None
+            ):
+                return "lru_cache(None)"
+        return None
+
+    def _check_scope(self, scope: ast.AST, path: str) -> list[Finding]:
+        """Memo dicts assigned in this class (``self.<name>``) or module
+        (bare ``<name>``) scope, with compliance evidence searched over
+        the whole scope subtree."""
+        memos: dict[str, int] = {}  # name -> first assignment line
+        is_class = isinstance(scope, ast.ClassDef)
+        body = scope.body if is_class else [
+            n for n in scope.body if not isinstance(n, ast.ClassDef)
+        ]
+        container = ast.Module(body=body, type_ignores=[]) if not is_class \
+            else scope
+        for node in ast.walk(container):
+            if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                name = _self_attr(t) if is_class else (
+                    t.id if isinstance(t, ast.Name) else None
+                )
+                if name is None and is_class and isinstance(t, ast.Name):
+                    name = t.id  # class-level default
+                if (
+                    name
+                    and _CACHE_NAME_RE.search(name)
+                    and node.value is not None
+                    and self._is_dict_ctor(node.value)
+                    and name not in memos
+                ):
+                    memos[name] = node.lineno
+        out: list[Finding] = []
+        for name, line in memos.items():
+            if not self._has_evidence(container, name):
+                out.append(Finding(
+                    path, line, self.code,
+                    f"memo dict '{name}' has no eviction bound "
+                    f"(.pop/.popitem/.clear or len() check) and no "
+                    f"version/epoch-keyed entries",
+                ))
+        return out
+
+    @staticmethod
+    def _is_dict_ctor(node: ast.AST) -> bool:
+        if isinstance(node, (ast.Dict, ast.DictComp)):
+            return True
+        if isinstance(node, ast.Call):
+            fn = node.func
+            fname = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            )
+            return fname in ("dict", "OrderedDict", "defaultdict")
+        return False
+
+    @staticmethod
+    def _names_memo(node: ast.AST, name: str) -> bool:
+        return _self_attr(node) == name or (
+            isinstance(node, ast.Name) and node.id == name
+        )
+
+    def _has_evidence(self, scope: ast.AST, name: str) -> bool:
+        for node in ast.walk(scope):
+            # self._memo.pop(...) / .popitem() / .clear()
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("pop", "popitem", "clear")
+                and self._names_memo(node.func.value, name)
+            ):
+                return True
+            # len(self._memo) bound check (inside a Compare)
+            if isinstance(node, ast.Compare):
+                for sub in ast.walk(node):
+                    if (
+                        isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Name)
+                        and sub.func.id == "len"
+                        and sub.args
+                        and self._names_memo(sub.args[0], name)
+                    ):
+                        return True
+            # self._memo[key-with-version-token] (read or write)
+            if isinstance(node, ast.Subscript) and self._names_memo(
+                node.value, name
+            ):
+                for sub in ast.walk(node.slice):
+                    token = None
+                    if isinstance(sub, ast.Attribute):
+                        token = sub.attr
+                    elif isinstance(sub, ast.Name):
+                        token = sub.id
+                    if token and _VERSION_TOKEN_RE.search(token):
+                        return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# RL003 — determinism (bit-identical replay is a contract, docs/sweeps.md)
+# ---------------------------------------------------------------------------
+
+class Determinism:
+    """No wall-clock time in duration math (``time.time`` /
+    ``datetime.now``; monotonic/perf_counter are fine), no global RNG
+    (stdlib ``random``, ``np.random.<fn>`` module state; seeded
+    ``default_rng`` / ``SeedSequence`` / ``jax.random`` are fine). In
+    the bit-identity scope additionally: no ``np.sum`` over float
+    arrays (pairwise-summation tree != sequential accumulation — the
+    drift PR 6 engineered the cost model around) and no iteration over
+    bare ``set``s (hash-order feeds heaps/fingerprints; ``sorted(...)``
+    the set first)."""
+
+    code = "RL003"
+    title = "nondeterminism hazard"
+
+    def applies(self, path: str) -> bool:
+        return _in(path, WALLCLOCK_SCOPE)
+
+    def check(self, tree: ast.Module, path: str) -> list[Finding]:
+        findings: list[Finding] = []
+        add = findings.append
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute):
+                base = node.value
+                if (
+                    node.attr == "time"
+                    and isinstance(base, ast.Name)
+                    and base.id == "time"
+                ):
+                    add(Finding(
+                        path, node.lineno, self.code,
+                        "time.time() is wall-clock (NTP steps, DST): use "
+                        "time.perf_counter()/monotonic() for durations",
+                    ))
+                elif node.attr in ("now", "utcnow", "today") and (
+                    (isinstance(base, ast.Name) and base.id in
+                     ("datetime", "date"))
+                    or (isinstance(base, ast.Attribute) and base.attr in
+                        ("datetime", "date"))
+                ):
+                    add(Finding(
+                        path, node.lineno, self.code,
+                        f"datetime.{node.attr}() is wall-clock; pass "
+                        f"timestamps in explicitly",
+                    ))
+                elif (
+                    isinstance(base, ast.Attribute)
+                    and base.attr == "random"
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id in ("np", "numpy")
+                    and node.attr not in _NP_RANDOM_OK
+                ):
+                    add(Finding(
+                        path, node.lineno, self.code,
+                        f"np.random.{node.attr} uses process-global RNG "
+                        f"state; thread a seeded np.random.Generator "
+                        f"instead",
+                    ))
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "random":
+                        add(Finding(
+                            path, node.lineno, self.code,
+                            "stdlib 'random' is process-global state; use "
+                            "np.random.default_rng(seed)",
+                        ))
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "random":
+                    add(Finding(
+                        path, node.lineno, self.code,
+                        "stdlib 'random' is process-global state; use "
+                        "np.random.default_rng(seed)",
+                    ))
+        if _in(path, DETERMINISM_SCOPE):
+            findings.extend(self._check_bit_identity(tree, path))
+        return findings
+
+    def _check_bit_identity(self, tree, path) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "sum"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in ("np", "numpy")
+            ):
+                out.append(Finding(
+                    path, node.lineno, self.code,
+                    "np.sum uses pairwise summation (result depends on "
+                    "array layout); accumulate sequentially or math.fsum",
+                ))
+        # bare-set iteration: per function scope, names bound to sets.
+        # Each scope is walked WITHOUT descending into nested defs (they
+        # get their own scope entry), so nothing is flagged twice.
+        scopes = [tree] + [
+            n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+
+        def walk_scope(root):
+            stack = list(root.body)
+            while stack:
+                node = stack.pop()
+                yield node
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue  # nested def: its own scope entry covers it
+                stack.extend(ast.iter_child_nodes(node))
+
+        for scope in scopes:
+            set_names = set()
+            for node in walk_scope(scope):
+                if isinstance(node, ast.Assign) and self._is_set_expr(
+                    node.value
+                ):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            set_names.add(t.id)
+            for node in walk_scope(scope):
+                iters = []
+                if isinstance(node, (ast.For, ast.AsyncFor)):
+                    iters = [node.iter]
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    iters = [g.iter for g in node.generators]
+                for it in iters:
+                    if self._is_set_expr(it) or (
+                        isinstance(it, ast.Name) and it.id in set_names
+                    ):
+                        out.append(Finding(
+                            path, it.lineno, self.code,
+                            "iterating a bare set: hash order leaks into "
+                            "event/fingerprint order; sorted(...) it",
+                        ))
+        return out
+
+    @staticmethod
+    def _is_set_expr(node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        return (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset")
+        )
+
+
+# ---------------------------------------------------------------------------
+# RL004 — swallowed exceptions (the PR-3 swallowed-futures class)
+# ---------------------------------------------------------------------------
+
+class SwallowedExceptions:
+    """``except Exception`` / ``except BaseException`` / bare ``except``
+    in core/ must re-raise, record the failure (assign ``*.error`` or
+    call a ``*fail*`` sink), or carry a reasoned disable comment. The
+    live engine's worker futures once swallowed everything — queries
+    just never finished."""
+
+    code = "RL004"
+    title = "broad except swallows the failure"
+
+    _BROAD = {"Exception", "BaseException"}
+    _SINKS = {"_fail", "fail", "record_error"}
+
+    def applies(self, path: str) -> bool:
+        return _in(path, (CORE,))
+
+    def check(self, tree: ast.Module, path: str) -> list[Finding]:
+        findings: list[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not self._is_broad(node.type):
+                continue
+            if self._handles(node):
+                continue
+            findings.append(Finding(
+                path, node.lineno, self.code,
+                "broad except neither re-raises, records onto "
+                "'*.error', nor calls a failure sink — the error "
+                "vanishes",
+            ))
+        return findings
+
+    def _is_broad(self, t: Optional[ast.AST]) -> bool:
+        if t is None:
+            return True  # bare except
+        if isinstance(t, ast.Name):
+            return t.id in self._BROAD
+        if isinstance(t, ast.Attribute):
+            return t.attr in self._BROAD
+        if isinstance(t, ast.Tuple):
+            return any(self._is_broad(e) for e in t.elts)
+        return False
+
+    def _handles(self, handler: ast.ExceptHandler) -> bool:
+        for node in ast.walk(handler):
+            if isinstance(node, ast.Raise):
+                return True
+            if isinstance(node, ast.Call):
+                fn = node.func
+                name = fn.id if isinstance(fn, ast.Name) else (
+                    fn.attr if isinstance(fn, ast.Attribute) else None
+                )
+                if name in self._SINKS:
+                    return True
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and t.attr == "error":
+                        return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# RL005 — slots / identity on hot paths
+# ---------------------------------------------------------------------------
+
+class SlotsIdentity:
+    """Classes in hot-path modules (``core/query.py``: a 1M-query day
+    allocates a million Queries) keep ``__slots__`` — via a literal
+    assignment, ``@dataclass(slots=True)``, or NamedTuple — and identity
+    equality: no hand-written ``__eq__``/``__hash__`` (queries are
+    billing identities, and value equality would break their use as
+    dict/heap keys). The named engine queue classes are held to the
+    same bar wherever they live in core/."""
+
+    code = "RL005"
+    title = "hot-path class missing slots or identity equality"
+
+    def applies(self, path: str) -> bool:
+        return _in(path, (CORE,))
+
+    def check(self, tree: ast.Module, path: str) -> list[Finding]:
+        whole_module = _in(path, HOT_MODULES)
+        findings: list[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if not (whole_module or node.name in HOT_CLASSES):
+                continue
+            if not self._has_slots(node):
+                findings.append(Finding(
+                    path, node.lineno, self.code,
+                    f"hot-path class '{node.name}' has no __slots__ "
+                    f"(add __slots__, @dataclass(slots=True), or "
+                    f"NamedTuple)",
+                ))
+            for stmt in node.body:
+                if isinstance(stmt, ast.FunctionDef) and stmt.name in (
+                    "__eq__", "__hash__"
+                ):
+                    findings.append(Finding(
+                        path, stmt.lineno, self.code,
+                        f"hot-path class '{node.name}' overrides "
+                        f"{stmt.name}: these classes are identities, "
+                        f"not values",
+                    ))
+        return findings
+
+    @staticmethod
+    def _has_slots(node: ast.ClassDef) -> bool:
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__slots__"
+                for t in stmt.targets
+            ):
+                return True
+            if (
+                isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)
+                and stmt.target.id == "__slots__"
+            ):
+                return True
+        for base in node.bases:
+            name = base.id if isinstance(base, ast.Name) else (
+                base.attr if isinstance(base, ast.Attribute) else None
+            )
+            if name == "NamedTuple":
+                return True
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call):
+                fn = dec.func
+                fname = fn.id if isinstance(fn, ast.Name) else (
+                    fn.attr if isinstance(fn, ast.Attribute) else None
+                )
+                if fname == "dataclass":
+                    for kw in dec.keywords:
+                        if kw.arg == "slots" and (
+                            isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True
+                        ):
+                            return True
+        return False
+
+
+RULES = [
+    LockDiscipline(),
+    VersionKeyedCaches(),
+    Determinism(),
+    SwallowedExceptions(),
+    SlotsIdentity(),
+]
