@@ -43,7 +43,7 @@ class AutoscaleConfig:
       run_queue — legacy PR-1 policy: scale-out when the running queue
                   stays above the high watermark, in below the low one.
       backlog   — scale from the stage heap's PREDICTED remaining
-                  chip-seconds (ClusterExecutor.predicted_backlog_s)
+                  chip-seconds (ClusterExecutor.predicted_backlog_cs)
                   normalized to a drain time at current capacity. One
                   huge waiting query is a large backlog long before it
                   is a long run queue, so scale-out fires earlier and
@@ -313,11 +313,11 @@ class CostEfficientCluster(ClusterExecutor):
             return left  # POS work units ARE chip-seconds
         return left * run.chips  # SOS: wall-seconds on an isolated slice
 
-    def _run_cs_factor(self, run: _Run) -> float:
+    def _run_cs_factor(self, run: _Run) -> float:  # reprolint: disable=RL102 -- mode-dependent dimension: dimensionless in POS (work units ARE chip-seconds), chips in SOS (work units are wall-seconds)
         return 1.0 if self.mode == "pos" else float(run.chips)
 
     def drain_time_s(self, now=None) -> float:
-        return self.predicted_backlog_s(now) / max(self.chips, 1)
+        return self.predicted_backlog_cs(now) / max(self.chips, 1)
 
     @property
     def needs_tick(self) -> bool:

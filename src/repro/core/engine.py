@@ -18,14 +18,14 @@ the ``last_completion_push`` dedupe hack the simulator needed on top.
 Hot-path complexity (the 1M-query-day requirement, benchmarks/scale.py):
 every per-event query is O(1) —
 
-  * ``predicted_backlog_s`` is an incrementally maintained counter, not
+  * ``predicted_backlog_cs`` is an incrementally maintained counter, not
     an O(running + waiting) scan. Each run's current-stage prediction is
     stored as the pair ``(t_finish * burn, burn)`` so the remaining
     chip-seconds at time ``now`` are ``sum(t_finish*burn) - now *
     sum(burn)`` — time-parametric, no decay bookkeeping to settle, and
     each retired run removes exactly the terms it added. Waiting queries
     and unstarted stages contribute version-tracked static sums. The
-    old scan survives as ``predicted_backlog_scan_s`` and a debug mode
+    old scan survives as ``predicted_backlog_scan_cs`` and a debug mode
     (``DEBUG_BACKLOG`` / ``check_backlog_invariant``) asserts the two
     agree after every advance — the hypothesis suite runs with it on.
   * quotes read a per-pool static cache (remaining exec time +
@@ -270,7 +270,7 @@ class ClusterExecutor:
 
     As a POOL in the coordinator's registry, an executor also answers
     placement questions: ``quote(q)`` prices the query's remaining
-    stages at the pool's current load, ``predicted_backlog_s`` is the
+    stages at the pool's current load, ``predicted_backlog_cs`` is the
     incrementally-maintained chip-seconds committed to the pool (the
     backlog-driven autoscale signal), and ``rehome`` — wired by the
     coordinator — may move a query to another pool at any stage
@@ -333,7 +333,7 @@ class ClusterExecutor:
         #: this pool's predicted-vs-actual stage walls without touching
         #: the accounting path (core/calibration.py, benchmarks)
         self.stage_observer: Optional[Callable[[Query, Stage, StageEvent], None]] = None
-        # --- incremental backlog counter (predicted_backlog_s) -------
+        # --- incremental backlog counter (predicted_backlog_cs) -------
         self._bl_wait_map: dict[int, float] = {}  # qid -> remaining cs
         self._bl_wait_cs = 0.0
         self._bl_unstarted_cs = 0.0
@@ -427,7 +427,7 @@ class ClusterExecutor:
             "cost": cost,
         }
 
-    def _run_cs_factor(self, run: _Run) -> float:
+    def _run_cs_factor(self, run: _Run) -> float:  # reprolint: disable=RL102 -- mode-dependent dimension: chip_s per work unit, where a work unit is wall-seconds (SOS) or chip-seconds (POS)
         """Chip-seconds per work unit of this run (base: work is
         wall-seconds on an isolated slice of `run.chips`)."""
         return float(run.chips)
@@ -507,14 +507,14 @@ class ClusterExecutor:
                 self._bl_burn += run.bl_burn
                 run.bl_state = 2
 
-    def predicted_backlog_s(self, now: Optional[float] = None) -> float:
+    def predicted_backlog_cs(self, now: Optional[float] = None) -> float:
         """Predicted chip-seconds committed to this pool: the running
         stages' remaining work (the same predictions the stage heap
         holds), every running query's unstarted stages, and every
         waiting query's remaining plan — the backlog-driven autoscale
         signal. O(1): maintained incrementally at submit / admit /
         stage-begin / finish / preempt / spill / rehome, with the old
-        full scan kept as ``predicted_backlog_scan_s`` and asserted
+        full scan kept as ``predicted_backlog_scan_cs`` and asserted
         equivalent in debug mode (``check_backlog_invariant``)."""
         self._bl_sync(now)
         t = self._bl_now if now is None else now
@@ -523,7 +523,7 @@ class ClusterExecutor:
             run_cs = 0.0
         return run_cs + self._bl_future_cs + self._bl_unstarted_cs + self._bl_wait_cs
 
-    def predicted_backlog_scan_s(self, now: Optional[float] = None) -> float:
+    def predicted_backlog_scan_cs(self, now: Optional[float] = None) -> float:
         """The original O(running + waiting) backlog recompute — the
         debug-mode reference the incremental counter is locked against."""
         total = 0.0
@@ -537,8 +537,8 @@ class ClusterExecutor:
 
     def check_backlog_invariant(self, now: Optional[float] = None) -> None:
         """Assert incremental backlog == full scan (debug/test hook)."""
-        inc = self.predicted_backlog_s(now)
-        scan = self.predicted_backlog_scan_s(now)
+        inc = self.predicted_backlog_cs(now)
+        scan = self.predicted_backlog_scan_cs(now)
         assert math.isclose(inc, scan, rel_tol=1e-9, abs_tol=1e-6), (
             f"{self.name}: incremental backlog {inc!r} != scan {scan!r} "
             f"at now={now!r}"

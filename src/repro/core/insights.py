@@ -77,7 +77,7 @@ def price_menu(
     calibration=None,
     vm_chips: int = 4,
     cf_chips: int = 32,
-    vm_price_s: float = 1.2 / 3600,
+    vm_price_per_chip_s: float = 1.2 / 3600,
     cf_multiplier: float = 10.0,
     relaxed_deadline_s: float = 300.0,
 ) -> list[Quote]:
@@ -145,9 +145,9 @@ def price_menu(
     cm = cost_model or CostModel(calibration=calibration)
     rows = [
         _PoolRow("vm", "reserved", cm.exec_time(work, vm_chips),
-                 cm.chip_seconds(work, vm_chips) * vm_price_s),
+                 cm.chip_seconds(work, vm_chips) * vm_price_per_chip_s),
         _PoolRow("cf", "elastic", cm.exec_time(work, cf_chips),
-                 cm.chip_seconds(work, cf_chips) * vm_price_s * cf_multiplier),
+                 cm.chip_seconds(work, cf_chips) * vm_price_per_chip_s * cf_multiplier),
     ]
     return _menu_from_rows(rows, relaxed_deadline_s)
 

@@ -108,7 +108,9 @@ class _ModelPool:
         self._models: dict[str, _LiveModel] = {}
         self._warm: set[tuple[str, int]] = set()
         self.compile_s: dict[tuple[str, int], float] = {}
-        self._lock = threading.Lock()
+        self._lock = sanitize.ordered_lock(
+            "_ModelPool._lock", threading.Lock()
+        )
 
     @property
     def kv_len(self) -> int:
@@ -215,7 +217,9 @@ class LiveExecutor(ClusterExecutor):
             from .allocation import Allocator
 
             self.allocator = Allocator(self.cost_model, spec.allocation)
-        self._mu = threading.RLock()
+        self._mu = sanitize.ordered_lock(
+            "LiveExecutor._mu", threading.RLock()
+        )
         self._cv = threading.Condition(self._mu)
         # qid -> (Query, placement token). The token is unique per
         # placement, so releasing an old placement can never clobber a
@@ -239,7 +243,7 @@ class LiveExecutor(ClusterExecutor):
         with self._mu:
             return len(self.running) + len(self.waiting)
 
-    def predicted_backlog_s(self, now: Optional[float] = None) -> float:
+    def predicted_backlog_cs(self, now: Optional[float] = None) -> float:
         """Predicted chip-seconds committed here, from the same cost
         model the quotes use (live stage walls are unknown upfront)."""
         with self._mu:
@@ -431,7 +435,7 @@ class LiveReservedPool(LiveExecutor):
             return not self.waiting and len(self.running) < self.workers
 
     def drain_time_s(self, now: Optional[float] = None) -> float:
-        return self.predicted_backlog_s(now) / self.workers
+        return self.predicted_backlog_cs(now) / self.workers
 
     def _queue_delay_estimate(self, q: Query, now: Optional[float]) -> float:
         return 0.0 if self.has_capacity() else self.drain_time_s(now)
@@ -516,7 +520,7 @@ class LiveElasticPool(LiveExecutor):
             saturated = len(self.running) >= self.workers
         if not saturated:
             return self.startup_s
-        return self.startup_s + self.predicted_backlog_s(now) / self.workers
+        return self.startup_s + self.predicted_backlog_cs(now) / self.workers
 
     def submit(self, q: Query, now: float) -> None:
         q.cluster = self.name

@@ -97,7 +97,7 @@ class PoolSpec:
     #: this pool is the only option)
     drift_action: str = "reprice"
 
-    def price_chip_hour(self, hw: HwSpec = V5E) -> float:
+    def effective_price_per_chip_hour(self, hw: HwSpec = V5E) -> float:
         if self.price_per_chip_hour is not None:
             return self.price_per_chip_hour
         return hw.reserved_price * self.price_multiplier
@@ -201,7 +201,7 @@ def build_pool(
     else:
         raise ValueError(f"unknown pool kind {spec.kind!r} for {spec.name!r}")
     pool.name = spec.name
-    pool.price_per_chip_s = spec.price_chip_hour(hw) / 3600.0
+    pool.price_per_chip_s = spec.effective_price_per_chip_hour(hw) / 3600.0
     pool.spec = spec  # type: ignore[attr-defined]
     if spec.allocation is not None:
         pool.allocator = Allocator(cm, spec.allocation)

@@ -7,6 +7,11 @@
   * lock-held asserts on the live engine's guarded attributes, generated
     from the SAME ``_GUARDED_BY`` class registries the static RL001 rule
     reads (tools/reprolint) — one source of truth for both checks,
+  * lock-ORDER asserts: acquisitions that descend the statically derived
+    lock hierarchy (``LOCK_RANKS``, from the reprolint RL006 lock graph
+    over live.py/scheduler.py/calibration.py) raise before they can
+    deadlock; ``tests/test_sanitize.py`` pins the table to the recomputed
+    static ranks so the two cannot drift apart,
   * post-run chip-second conservation and gap/overlap-free stage-trace
     asserts over the finished population (``check_result``).
 
@@ -20,6 +25,7 @@ fingerprints under ``REPRO_SANITIZE=1`` to prove it.
 from __future__ import annotations
 
 import os
+import threading
 from typing import Iterable
 
 _ENABLED = os.environ.get("REPRO_SANITIZE", "") == "1"
@@ -85,6 +91,101 @@ def guard(obj, attr: str) -> None:
         f"sanitize: {type(obj).__name__}.{attr} accessed without holding "
         f"{' or '.join(locks)} (declared in _GUARDED_BY)"
     )
+
+
+# --- lock-order enforcement, from the reprolint RL006 lock graph ----------
+
+#: the statically derived lock hierarchy: ``tools.reprolint.lockgraph``
+#: ranks every lock by its longest acquisition path (outer locks rank
+#: lower, nested-inner locks higher). Acquiring DOWN the hierarchy —
+#: a lower-ranked lock while holding a higher-ranked one — is the ABBA
+#: half of a potential deadlock, caught here before it can block.
+#: Equal-rank locks carry no static nesting evidence and are left
+#: unconstrained. tests/test_sanitize.py recomputes the ranks from the
+#: lock graph and asserts equality, so this table cannot drift from the
+#: analysis that derived it.
+LOCK_RANKS = {
+    "LiveExecutor._mu": 0,
+    "_ModelPool._lock": 0,
+    "CrossPoolFusionIndex._lock": 1,
+}
+
+_held_tls = threading.local()
+
+
+def _held_stack() -> list:
+    st = getattr(_held_tls, "stack", None)
+    if st is None:
+        st = _held_tls.stack = []
+    return st
+
+
+def check_lock_order(label: str) -> None:
+    """Raise if acquiring ``label`` NOW would descend the static lock
+    hierarchy on this thread. Called before the underlying acquire, so
+    the violation surfaces as a stack trace instead of a deadlock."""
+    rank = LOCK_RANKS.get(label)
+    if rank is None:
+        return
+    for held_label, held_rank in _held_stack():
+        if held_label != label and held_rank is not None and held_rank > rank:
+            raise SanitizeError(
+                f"sanitize: acquiring {label} (rank {rank}) while "
+                f"holding {held_label} (rank {held_rank}) descends the "
+                f"static lock hierarchy — the reverse nesting exists in "
+                f"the code, so this order can deadlock (ABBA)"
+            )
+
+
+class _OrderedLock:
+    """Transparent wrapper around a ``threading`` lock that enforces
+    :data:`LOCK_RANKS` when the sanitizer is on. Off, each acquire costs
+    one extra attribute hop and nothing else; results are bit-identical
+    either way (the wrapper never reorders or blocks differently).
+    ``Condition(wrapped_mu)`` works: the Condition binds the wrapper's
+    ``acquire``/``release`` (order-checked) and reaches ``_is_owned`` /
+    ``_release_save`` / ``_acquire_restore`` through ``__getattr__``."""
+
+    __slots__ = ("_label", "_raw")
+
+    def __init__(self, label: str, raw) -> None:
+        object.__setattr__(self, "_label", label)
+        object.__setattr__(self, "_raw", raw)
+
+    def acquire(self, *args, **kwargs) -> bool:
+        if _ENABLED:
+            check_lock_order(self._label)
+        got = self._raw.acquire(*args, **kwargs)
+        if got and _ENABLED:
+            _held_stack().append((self._label, LOCK_RANKS.get(self._label)))
+        return got
+
+    def release(self) -> None:
+        if _ENABLED:
+            # tolerate an enable-flip mid-hold: pop only what was pushed
+            st = _held_stack()
+            for i in range(len(st) - 1, -1, -1):
+                if st[i][0] == self._label:
+                    del st[i]
+                    break
+        self._raw.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __getattr__(self, name):
+        return getattr(object.__getattribute__(self, "_raw"), name)
+
+
+def ordered_lock(label: str, raw):
+    """Wrap ``raw`` (a ``threading`` lock) so acquisitions are checked
+    against the static lock hierarchy under ``REPRO_SANITIZE=1``. The
+    ``label`` is the lock graph's node name, ``Class.attr``."""
+    return _OrderedLock(label, raw)
 
 
 # --- post-run population checks -------------------------------------------

@@ -31,6 +31,7 @@ import threading
 from collections import deque
 from typing import Iterable, Optional, Union
 
+from . import sanitize
 from .engine import ClusterExecutor
 from .query import Query, QueryWork
 from .sla import Policy, ServiceLevel, SLAConfig
@@ -264,7 +265,9 @@ class CrossPoolFusionIndex:
     _GUARDED_BY = {"_buckets": "_lock"}
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = sanitize.ordered_lock(
+            "CrossPoolFusionIndex._lock", threading.Lock()
+        )
         # key -> {query: pool}; dict preserves insertion order, so FIFO
         # within a bucket holds across pools
         self._buckets: dict[tuple, dict[Query, ClusterExecutor]] = {}

@@ -220,9 +220,9 @@ def test_withdraw_keeps_backlog_and_index_consistent():
     a.submit(_q(prompt=900_000), 0.0)
     w = _q(t=1.0)
     a.submit(w, 1.0)
-    before = a.predicted_backlog_s(1.0)
+    before = a.predicted_backlog_cs(1.0)
     assert a.withdraw(w)
-    after = a.predicted_backlog_s(1.0)
+    after = a.predicted_backlog_cs(1.0)
     assert after < before
     a.check_backlog_invariant(1.0)  # incremental == scan after withdraw
     assert not a.withdraw(w)  # second claim must fail

@@ -456,7 +456,7 @@ def test_live_elastic_quote_includes_drain_when_saturated():
         with pool._mu:
             for q in occupants:
                 pool.running[q.qid] = (q, object())
-        drain = pool.predicted_backlog_s(0.0) / pool.workers
+        drain = pool.predicted_backlog_cs(0.0) / pool.workers
         assert drain > 0.0
         est = pool._queue_delay_estimate(probe, 0.0)
         assert est == pytest.approx(pool.startup_s + drain)

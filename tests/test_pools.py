@@ -252,10 +252,10 @@ def test_predicted_backlog_counts_running_and_waiting_remainders():
     vm.submit(a, 0.0)  # runs (1 slice)
     vm.submit(b, 0.0)  # waits
     expected = 2 * cm.plan(a.work, 16).chip_seconds
-    assert vm.predicted_backlog_s(0.0) == pytest.approx(expected)
+    assert vm.predicted_backlog_cs(0.0) == pytest.approx(expected)
     # the backlog decays as the running stage executes — by elapsed time
     # on the slice, capped at the current stage's remaining work
-    later = vm.predicted_backlog_s(1.0)
+    later = vm.predicted_backlog_cs(1.0)
     assert expected - 1.0 * 16 <= later < expected
 
 

@@ -178,7 +178,7 @@ def _run_heap_checked(seed: int, n: int, spill_back: bool,
     faults, re-checking after EVERY executor advance: (a) the heap
     discipline — every running stage has exactly one valid heap entry,
     and no valid entry refers to a retired run — and (b) the backlog
-    equivalence — the O(1) incremental ``predicted_backlog_s`` counter
+    equivalence — the O(1) incremental ``predicted_backlog_cs`` counter
     matches the full O(running+waiting) recompute scan. With
     ``hot_swap``, a calibration table is swapped into EVERY pool's cost
     model MID-RUN (each pool after its own 10th advance) — the

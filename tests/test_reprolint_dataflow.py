@@ -1,0 +1,398 @@
+"""The RL1xx unit-of-measure dataflow rules and the RL006 lock-order
+analysis, demonstrated against the four billing bugs this repo has
+actually shipped (seeded back in fixture form), plus the suffix
+grammar, summary fixed-point convergence, the CLI result cache, and
+GitHub annotation output."""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from tools.reprolint import LintCache, lint_paths, lint_text
+from tools.reprolint.units import (
+    CHIP_S,
+    CHIPS,
+    DIMENSIONLESS,
+    S,
+    TOKENS,
+    USD,
+    USD_PER_CHIP_S,
+    unit_from_name,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+CORE = "src/repro/core/fixture.py"  # path chosen to put rules in scope
+
+
+def codes(src: str, path: str = CORE) -> list[str]:
+    return [f.code for f in lint_text(src, path)]
+
+
+# --- the unit algebra and suffix grammar ----------------------------------
+
+def test_unit_algebra():
+    assert CHIPS * S == CHIP_S
+    assert USD / CHIP_S == USD_PER_CHIP_S
+    assert CHIP_S / CHIPS == S
+    assert (S ** 2) / S == S
+    assert CHIP_S / CHIP_S == DIMENSIONLESS
+    assert USD_PER_CHIP_S.render() == "usd_per_chip_s"
+    assert (CHIP_S * TOKENS).render() == "chips*s*tokens"
+
+
+@pytest.mark.parametrize("name,unit", [
+    ("billed_cs", CHIP_S),
+    ("exec_s", S),
+    ("startup_s", S),
+    ("price_per_chip_s", USD_PER_CHIP_S),
+    ("price_per_chip_hour", USD_PER_CHIP_S),  # hours are time too
+    ("vm_price_per_chip_s", USD_PER_CHIP_S),
+    ("decode_tokens", TOKENS),
+    ("slice_chips", CHIPS),
+    ("est_cost_usd", USD),
+    ("drift_ratio", DIMENSIONLESS),
+    ("speed_factor", DIMENSIONLESS),
+    # same-dimension repeats collapse: these are seconds, not s^2
+    ("drain_time_s", S),
+    ("submit_time_s", S),
+    # no convention -> no unit
+    ("pools", None),
+    ("cursor", None),
+    ("per_chip_s", None),  # 'per' with no numerator carries nothing
+])
+def test_suffix_grammar(name, unit):
+    assert unit_from_name(name) == unit
+
+
+# --- the four historical billing bugs, seeded back ------------------------
+
+# Bug 1 (PR 1 era): decode chunks priced at the initial context — token
+# counts added straight into a chip-second accumulator.
+DECODE_PRICED_AT_CONTEXT = '''
+def bill_decode(prompt_tokens, decode_tokens, chips, dt_s):
+    prefill_cs = chips * dt_s
+    total_cs = prefill_cs + decode_tokens
+    return total_cs
+'''
+
+# Bug 2 (fusion era): a fused split that dropped the group normalizer —
+# the share is chip-seconds * tokens, not chip-seconds.
+FUSED_SPLIT_DROPPED_NORMALIZER = '''
+def split_bill(total_cs, member_tokens, group_tokens):
+    share_cs = total_cs * member_tokens
+    return share_cs
+'''
+
+# Bug 3: compile seconds padded into the billed wall with a raw
+# constant at the accounting sink.
+BILLED_COMPILE_PAD = '''
+def account(q, stage, cluster, start_s, finish_s, chips, price_per_chip_s):
+    billed = (finish_s - start_s) * chips
+    account_stage(q, stage, cluster, start_s, finish_s, chips,
+                  billed + 2.5, price_per_chip_s, 0)
+'''
+
+# Bug 4 (PR 2): pool chips where slice chips belonged — here the
+# backlog is divided by BOTH, leaving s/chips in a *_s name.
+POOL_CHIPS_VS_SLICE_CHIPS = '''
+def queue_delay_estimate(pool, backlog_cs, slice_chips):
+    wait_s = backlog_cs / pool.chips / slice_chips
+    return wait_s
+'''
+
+
+def test_rl101_decode_priced_at_initial_context():
+    findings = lint_text(DECODE_PRICED_AT_CONTEXT, CORE)
+    assert [f.code for f in findings] == ["RL101"]
+    assert "chip_s" in findings[0].message
+    assert "tokens" in findings[0].message
+
+
+def test_rl102_fused_split_dropped_normalizer():
+    findings = lint_text(FUSED_SPLIT_DROPPED_NORMALIZER, CORE)
+    assert [f.code for f in findings] == ["RL102"]
+    assert "share_cs" in findings[0].message
+
+
+def test_rl103_billed_compile_seconds_pad():
+    findings = lint_text(BILLED_COMPILE_PAD, CORE)
+    assert [f.code for f in findings] == ["RL103"]
+    assert "billed_cs" in findings[0].message
+    assert "2.5" in findings[0].message
+
+
+def test_rl102_pool_chips_vs_slice_chips():
+    findings = lint_text(POOL_CHIPS_VS_SLICE_CHIPS, CORE)
+    assert [f.code for f in findings] == ["RL102"]
+    assert "wait_s" in findings[0].message
+
+
+# --- the surrounding checker behaviors ------------------------------------
+
+def test_rl101_seeded_positional_arg_mismatch():
+    src = '''
+def account(q, stage, cluster, start_s, finish_s, chips,
+            exec_s, price_per_chip_s):
+    account_stage(q, stage, cluster, start_s, finish_s, chips,
+                  exec_s, price_per_chip_s, 0)
+'''
+    findings = lint_text(src, CORE)
+    assert [f.code for f in findings] == ["RL101"]
+    assert "billed_cs" in findings[0].message
+
+
+def test_rl101_united_kwarg_mismatch():
+    src = '''
+def quote(exec_s):
+    return Quote(est_cost=exec_s)
+'''
+    findings = lint_text(src, CORE)
+    assert [f.code for f in findings] == ["RL101"]
+    assert "est_cost" in findings[0].message
+
+
+def test_rl101_cross_unit_comparison():
+    src = '''
+def admit(deadline_s, billed_cs):
+    return billed_cs < deadline_s
+'''
+    assert codes(src) == ["RL101"]
+
+
+def test_multiplicative_conversion_factors_are_legal():
+    # hours and seconds share a dimension: /3600.0 is a pure scale
+    src = '''
+def price(pool):
+    price_per_chip_s = pool.price_per_chip_hour / 3600.0
+    return price_per_chip_s
+'''
+    assert codes(src) == []
+
+
+def test_rl102_function_suffix_vs_return():
+    src = '''
+def drain_time_s(backlog_cs):
+    return backlog_cs
+'''
+    findings = lint_text(src, CORE)
+    assert [f.code for f in findings] == ["RL102"]
+    assert "drain_time_s" in findings[0].message
+
+
+def test_summary_fixed_point_converges_on_recursion():
+    # mutually recursive chip-second passthroughs: the fixed point must
+    # terminate and agree with the suffix — no findings
+    src = '''
+def ping_cs(n, unit_cs):
+    if n <= 0:
+        return unit_cs
+    return pong_cs(n - 1, unit_cs)
+
+def pong_cs(n, unit_cs):
+    if n <= 0:
+        return unit_cs
+    return ping_cs(n - 1, unit_cs)
+'''
+    assert codes(src) == []
+
+
+def test_summary_fixed_point_flags_recursive_lie():
+    # self-recursion whose base case returns seconds from a *_cs name:
+    # the summary stabilizes at s and the suffix check fires
+    src = '''
+def backoff_cs(n, base_s):
+    if n <= 0:
+        return base_s
+    return backoff_cs(n - 1, base_s) + base_s
+'''
+    assert codes(src) == ["RL102"]
+
+
+def test_rl1xx_scoped_to_core():
+    assert codes(DECODE_PRICED_AT_CONTEXT, "benchmarks/scale.py") == []
+
+
+def test_rl1xx_suppression_applies():
+    src = DECODE_PRICED_AT_CONTEXT.replace(
+        "total_cs = prefill_cs + decode_tokens",
+        "total_cs = prefill_cs + decode_tokens"
+        "  # reprolint: disable=RL101 -- seeded fixture",
+    )
+    assert codes(src) == []
+
+
+# --- RL006: lock-order (ABBA) cycles --------------------------------------
+
+ABBA = '''
+import threading
+
+class Pool:
+    _GUARDED_BY = {"waiting": "_mu"}
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._lock = threading.Lock()
+        self.waiting = []
+
+    def place(self):
+        with self._mu:
+            with self._lock:
+                pass
+
+    def drain(self):
+        with self._lock:
+            with self._mu:
+                pass
+'''
+
+
+def test_rl006_abba_nested_withs():
+    findings = lint_text(ABBA, CORE)
+    assert [f.code for f in findings] == ["RL006"]
+    assert "ABBA" in findings[0].message
+    assert "Pool._mu -> Pool._lock" in findings[0].message
+
+
+def test_rl006_consistent_order_is_clean():
+    clean = ABBA.replace(
+        "with self._lock:\n            with self._mu:",
+        "with self._mu:\n            with self._lock:",
+    )
+    assert codes(clean) == []
+
+
+def test_rl006_cycle_through_method_calls():
+    # the inversion hides behind calls: place() holds _mu and calls a
+    # helper that takes _lock; drain() holds _lock and calls a helper
+    # that takes _mu — only the acquisition summaries see the cycle
+    src = '''
+import threading
+
+class Pool:
+    _GUARDED_BY = {"waiting": "_mu"}
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._lock = threading.Lock()
+        self.waiting = []
+
+    def place(self):
+        with self._mu:
+            self._index_add()
+
+    def _index_add(self):
+        with self._lock:
+            pass
+
+    def drain(self):
+        with self._lock:
+            self._pop()
+
+    def _pop(self):
+        with self._mu:
+            pass
+'''
+    findings = lint_text(src, CORE)
+    assert [f.code for f in findings] == ["RL006"]
+    assert "ABBA" in findings[0].message
+
+
+def test_rl006_repo_lock_hierarchy_is_acyclic():
+    from tools.reprolint import lockgraph
+
+    graph = lockgraph.project_lock_graph(REPO)
+    assert lockgraph.find_cycles(graph) == []
+    ranks = lockgraph.lock_ranks(graph)
+    # the load-bearing repo fact: the fusion index lock is innermost
+    assert ranks["CrossPoolFusionIndex._lock"] > ranks["LiveExecutor._mu"]
+
+
+# --- the CLI result cache -------------------------------------------------
+
+def _seed_tree(root: Path, body: str) -> Path:
+    f = root / "src" / "repro" / "core" / "fixture.py"
+    f.parent.mkdir(parents=True)
+    f.write_text(body)
+    return f
+
+
+def test_cache_round_trip_and_hit(tmp_path):
+    f = _seed_tree(tmp_path, DECODE_PRICED_AT_CONTEXT)
+    cache_file = tmp_path / "cache.json"
+
+    cache = LintCache(cache_file)
+    first = lint_paths(["src"], tmp_path, cache=cache)
+    cache.save()
+    assert [x.code for x in first] == ["RL101"]
+    assert cache_file.exists()
+
+    # prove the second run is SERVED from the cache: tamper the stored
+    # message and watch it come back verbatim (mtime unchanged)
+    raw = json.loads(cache_file.read_text())
+    entry = raw["entries"]["src/repro/core/fixture.py"]
+    entry["findings"][0][2] = "tampered-proof-of-cache-hit"
+    cache_file.write_text(json.dumps(raw))
+    second = lint_paths(["src"], tmp_path, cache=LintCache(cache_file))
+    assert second[0].message == "tampered-proof-of-cache-hit"
+
+
+def test_cache_invalidated_by_content_change(tmp_path):
+    f = _seed_tree(tmp_path, DECODE_PRICED_AT_CONTEXT)
+    cache_file = tmp_path / "cache.json"
+    cache = LintCache(cache_file)
+    lint_paths(["src"], tmp_path, cache=cache)
+    cache.save()
+
+    f.write_text(FUSED_SPLIT_DROPPED_NORMALIZER)
+    cache2 = LintCache(cache_file)
+    got = lint_paths(["src"], tmp_path, cache=cache2)
+    assert [x.code for x in got] == ["RL102"]
+
+
+def test_cache_touch_without_change_still_hits(tmp_path):
+    f = _seed_tree(tmp_path, DECODE_PRICED_AT_CONTEXT)
+    cache_file = tmp_path / "cache.json"
+    cache = LintCache(cache_file)
+    lint_paths(["src"], tmp_path, cache=cache)
+    cache.save()
+    before = json.loads(cache_file.read_text())
+
+    os.utime(f, ns=(1, 1))  # mtime changes, content does not
+    cache2 = LintCache(cache_file)
+    got = lint_paths(["src"], tmp_path, cache=cache2)
+    cache2.save()
+    assert [x.code for x in got] == ["RL101"]
+    after = json.loads(cache_file.read_text())
+    entry = after["entries"]["src/repro/core/fixture.py"]
+    assert entry["mtime_ns"] == 1
+    assert entry["sha256"] == \
+        before["entries"]["src/repro/core/fixture.py"]["sha256"]
+
+
+# --- CLI: --format github and --cache flags -------------------------------
+
+def test_cli_github_annotations(tmp_path, capsys):
+    from tools.reprolint.__main__ import main
+
+    _seed_tree(tmp_path, DECODE_PRICED_AT_CONTEXT)
+    rc = main(["src", "--root", str(tmp_path), "--format", "github"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert out.startswith(
+        "::error file=src/repro/core/fixture.py,line=4,title=RL101::"
+    )
+
+
+def test_cli_cache_flags(tmp_path, capsys):
+    from tools.reprolint.__main__ import main
+
+    _seed_tree(tmp_path, DECODE_PRICED_AT_CONTEXT)
+    cache_file = tmp_path / ".reprolint_cache.json"
+    args = ["src", "--root", str(tmp_path), "--cache", str(cache_file)]
+    assert main(args) == 1
+    assert cache_file.exists()
+    capsys.readouterr()
+    assert main(args) == 1  # cached run reports the same findings
+    assert "RL101" in capsys.readouterr().out
+    assert main(args + ["--no-cache"]) == 1

@@ -150,6 +150,72 @@ def test_sanitized_run_is_bit_identical():
     assert base == sani
 
 
+# --- lock-order enforcement: the static hierarchy, checked live -----------
+
+def test_lock_ranks_match_static_analysis():
+    """The runtime table IS the static analysis: recompute the lock
+    ranks from the reprolint RL006 lock graph and require equality, so
+    neither side can drift without this test failing."""
+    from pathlib import Path
+
+    from tools.reprolint import lockgraph
+
+    repo = Path(__file__).resolve().parents[1]
+    graph = lockgraph.project_lock_graph(repo)
+    assert lockgraph.find_cycles(graph) == []
+    assert lockgraph.lock_ranks(graph) == sanitize.LOCK_RANKS
+
+
+def test_lock_order_descent_raises(sanitized):
+    mu = sanitize.ordered_lock("LiveExecutor._mu", threading.RLock())
+    fl = sanitize.ordered_lock(
+        "CrossPoolFusionIndex._lock", threading.Lock()
+    )
+    with fl:
+        with pytest.raises(SanitizeError, match="ABBA"):
+            with mu:
+                pass
+
+
+def test_lock_order_descending_into_index_is_legal(sanitized):
+    mu = sanitize.ordered_lock("LiveExecutor._mu", threading.RLock())
+    fl = sanitize.ordered_lock(
+        "CrossPoolFusionIndex._lock", threading.Lock()
+    )
+    with mu:
+        with mu:  # RLock re-entry is not a descent
+            with fl:
+                pass
+    # the stack drains: a fresh correct-order acquisition still works
+    with mu:
+        with fl:
+            pass
+
+
+def test_lock_order_condition_over_wrapper(sanitized):
+    mu = sanitize.ordered_lock("LiveExecutor._mu", threading.RLock())
+    cv = threading.Condition(mu)
+    with cv:  # Condition binds the wrapper's acquire/release
+        pass
+    fl = sanitize.ordered_lock(
+        "CrossPoolFusionIndex._lock", threading.Lock()
+    )
+    with fl:
+        with pytest.raises(SanitizeError, match="descends"):
+            with cv:
+                pass
+
+
+def test_lock_order_off_switch_is_a_noop():
+    mu = sanitize.ordered_lock("LiveExecutor._mu", threading.RLock())
+    fl = sanitize.ordered_lock(
+        "CrossPoolFusionIndex._lock", threading.Lock()
+    )
+    with fl:
+        with mu:  # would be a violation with the sanitizer on
+            pass
+
+
 def test_simconfig_flag_reaches_pools():
     reset_qids()
     sim = Simulation(SimConfig(sanitize=True))

@@ -119,19 +119,124 @@ def iter_py_files(paths: Iterable[str], root: Path) -> list[Path]:
     return out
 
 
-def lint_paths(paths: Iterable[str], root: Optional[Path] = None) -> list[Finding]:
+def lint_paths(
+    paths: Iterable[str],
+    root: Optional[Path] = None,
+    cache: Optional["LintCache"] = None,
+) -> list[Finding]:
     """Lint every ``.py`` file under ``paths`` (files or directories),
-    reporting findings with paths relative to ``root`` (default: cwd)."""
+    reporting findings with paths relative to ``root`` (default: cwd).
+
+    The project root is attached for the duration of the run so the
+    interprocedural analyses (RL006, RL101–RL103) see the cross-module
+    call graph of ``core/`` + ``launch/``; standalone ``lint_text``
+    calls stay hermetic. ``cache`` (see :class:`LintCache`) skips
+    re-analysis of files whose content and analysis inputs are
+    unchanged."""
+    from . import dataflow
+
     root = Path.cwd() if root is None else Path(root)
     findings: list[Finding] = []
-    for f in iter_py_files(paths, root):
-        try:
-            rel = f.resolve().relative_to(root.resolve()).as_posix()
-        except ValueError:
-            rel = f.as_posix()
-        findings.extend(lint_text(f.read_text(), rel))
+    dataflow.set_project_root(root)
+    try:
+        env_key = dataflow.project_summaries()[1] if cache else ""
+        for f in iter_py_files(paths, root):
+            try:
+                rel = f.resolve().relative_to(root.resolve()).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            text = f.read_text()
+            if cache is not None:
+                cached = cache.get(rel, f, text, env_key)
+                if cached is not None:
+                    findings.extend(cached)
+                    continue
+            got = lint_text(text, rel)
+            if cache is not None:
+                cache.put(rel, f, text, env_key, got)
+            findings.extend(got)
+    finally:
+        dataflow.set_project_root(None)
     findings.sort(key=lambda f: (f.path, f.line, f.code))
     return findings
+
+
+# --- per-file result cache (mtime + content hash keyed) -------------------
+
+#: bump when rule behavior changes: stale caches must miss, not lie
+CACHE_SCHEMA = 1
+
+
+class LintCache:
+    """Per-file finding cache for the CLI: a file whose mtime (fast
+    path) or content hash (after a touch) and analysis environment are
+    unchanged skips re-analysis entirely. The environment key is the
+    digest of the interprocedural summary table, so editing ``core/``
+    or ``launch/`` invalidates every file that could see different
+    cross-module summaries — the cache can never serve findings
+    computed against a different call graph."""
+
+    def __init__(self, path) -> None:
+        self.path = Path(path)
+        self.entries: dict[str, dict] = {}
+        self.dirty = False
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            return
+        if isinstance(raw, dict) and raw.get("schema") == CACHE_SCHEMA:
+            entries = raw.get("entries", {})
+            if isinstance(entries, dict):
+                self.entries = entries
+
+    @staticmethod
+    def _hash(text: str) -> str:
+        import hashlib
+
+        return hashlib.sha256(text.encode()).hexdigest()
+
+    def get(self, rel: str, file: Path, text: str,
+            env_key: str) -> Optional[list[Finding]]:
+        entry = self.entries.get(rel)
+        if not isinstance(entry, dict) or entry.get("env") != env_key:
+            return None
+        try:
+            mtime_ns = file.stat().st_mtime_ns
+        except OSError:
+            return None
+        if entry.get("mtime_ns") != mtime_ns:
+            if entry.get("sha256") != self._hash(text):
+                return None
+            entry["mtime_ns"] = mtime_ns  # touched but identical
+            self.dirty = True
+        try:
+            return [
+                Finding(rel, int(line), str(code), str(message))
+                for line, code, message in entry.get("findings", [])
+            ]
+        except (TypeError, ValueError):
+            return None
+
+    def put(self, rel: str, file: Path, text: str, env_key: str,
+            findings: list[Finding]) -> None:
+        try:
+            mtime_ns = file.stat().st_mtime_ns
+        except OSError:
+            return
+        self.entries[rel] = {
+            "env": env_key,
+            "mtime_ns": mtime_ns,
+            "sha256": self._hash(text),
+            "findings": [[f.line, f.code, f.message] for f in findings],
+        }
+        self.dirty = True
+
+    def save(self) -> None:
+        if not self.dirty:
+            return
+        payload = {"schema": CACHE_SCHEMA, "entries": self.entries}
+        self.path.write_text(json.dumps(payload, sort_keys=True) + "\n")
+        self.dirty = False
 
 
 # --- baseline: a per-(file, rule) count ratchet ---------------------------

@@ -2,8 +2,13 @@
 
 Exit 0 when every finding is covered by the baseline (or there are
 none); exit 1 otherwise, printing one ``path:line: CODE message`` per
-finding. ``--write-baseline`` regenerates the ratchet file from the
-current findings instead of failing.
+finding (``--format github`` emits workflow annotations instead, so
+findings surface inline on PRs). ``--write-baseline`` regenerates the
+ratchet file from the current findings instead of failing.
+
+``--cache FILE`` keeps a per-file result cache keyed on mtime +
+content hash + the interprocedural summary digest, so repeated runs
+(CI, pre-commit) skip unchanged files; ``--no-cache`` ignores it.
 """
 from __future__ import annotations
 
@@ -11,13 +16,29 @@ import argparse
 import sys
 from pathlib import Path
 
-from . import apply_baseline, lint_paths, load_baseline, save_baseline
+from . import (
+    LintCache,
+    apply_baseline,
+    lint_paths,
+    load_baseline,
+    save_baseline,
+)
+
+
+def render_github(finding) -> str:
+    # '::' and newlines would terminate the annotation early
+    message = finding.message.replace("\n", " ").replace("::", ":")
+    return (
+        f"::error file={finding.path},line={finding.line},"
+        f"title={finding.code}::{message}"
+    )
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m tools.reprolint",
-        description="repo-native invariant lints (RL001-RL005)",
+        description="repo-native invariant lints "
+                    "(RL001-RL006, RL101-RL103)",
     )
     ap.add_argument(
         "paths", nargs="*", default=["src", "tests", "benchmarks"],
@@ -35,10 +56,30 @@ def main(argv=None) -> int:
         "--write-baseline", default=None, metavar="FILE",
         help="write the current findings as the new baseline and exit 0",
     )
+    ap.add_argument(
+        "--cache", default=None, metavar="FILE",
+        help="per-file result cache (e.g. .reprolint_cache.json); "
+             "unchanged files skip re-analysis",
+    )
+    ap.add_argument(
+        "--no-cache", action="store_true",
+        help="ignore --cache: analyze every file fresh",
+    )
+    ap.add_argument(
+        "--format", choices=("text", "github"), default="text",
+        help="'github' emits ::error workflow annotations",
+    )
     args = ap.parse_args(argv)
 
     root = Path(args.root) if args.root else Path.cwd()
-    findings = lint_paths(args.paths or ["src", "tests", "benchmarks"], root)
+    cache = None
+    if args.cache and not args.no_cache:
+        cache = LintCache(args.cache)
+    findings = lint_paths(
+        args.paths or ["src", "tests", "benchmarks"], root, cache=cache
+    )
+    if cache is not None:
+        cache.save()
 
     if args.write_baseline:
         save_baseline(args.write_baseline, findings)
@@ -52,7 +93,7 @@ def main(argv=None) -> int:
         findings = apply_baseline(findings, load_baseline(args.baseline))
 
     for f in findings:
-        print(f.render())
+        print(render_github(f) if args.format == "github" else f.render())
     if findings:
         print(f"reprolint: {len(findings)} finding(s)", file=sys.stderr)
         return 1

@@ -1,0 +1,945 @@
+"""Unit-of-measure dataflow analysis (RL101/RL102/RL103).
+
+An abstract interpreter over stdlib ``ast``: every expression evaluates
+to an abstract value carrying a :class:`~tools.reprolint.units.Unit`
+(or *unknown*, the silent top), environments map local names to values,
+and the transfer functions are the unit algebra — ``+``/``-``/
+comparisons require equal dimensions, ``*``/``/`` add/subtract
+exponents. Numeric literals are *adoptive*: dimensionless until they
+meet a united operand (so ``acc = 0.0; acc += dt_s`` types ``acc`` as
+seconds without annotation).
+
+Interprocedural layer: each function gets a **summary** (its return
+unit, or a tuple of units for multi-returns), computed as a fixed
+point over the call graph — within the file under lint always, and
+across ``src/repro/core`` + ``src/repro/launch`` when a project root
+is attached (the CLI and ``lint_paths`` do this). A function whose
+body yields no concrete return unit falls back to its own name's
+suffix (``_run_remaining_cs`` summarizes as chip-seconds even when
+its branches defeat inference).
+
+The three rules this module backs:
+
+  RL101  unit-mismatched ``+``/``-``/comparison operands (also: an
+         argument whose unit contradicts a known parameter, and
+         branch-divergent "mixed" locals used in arithmetic)
+  RL102  a product/quotient (or any concretely-united expression)
+         assigned to a name whose suffix declares a different unit
+  RL103  a non-zero numeric literal in an *additive* position flowing
+         into a billing sink (``account_stage``/``Quote`` arguments
+         with usd or chip-second dimensions, or stores to billing
+         attributes) — multiplicative conversion factors like
+         ``/ 3600.0`` stay legal
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from . import Finding
+from .units import (
+    BILLING_ATTRS,
+    CHIP_S,
+    DIMENSIONLESS,
+    SEED_FUNCS,
+    Unit,
+    lookup_name,
+    unit_from_name,
+)
+
+CORE = "src/repro/core/"
+#: directories whose call graph feeds the interprocedural summaries
+SUMMARY_SCOPE = ("src/repro/core", "src/repro/launch")
+
+_PASSTHROUGH_CALLS = {"abs", "float", "round", "int", "fsum", "floor",
+                      "ceil", "trunc", "copysign", "nextafter"}
+_EXTREMUM_CALLS = {"min", "max"}
+
+
+class Val:
+    """Abstract value: a concrete unit, unknown (``unit is None``), a
+    branch-divergent mixed set, a literal, or a tuple of units."""
+
+    __slots__ = ("unit", "mixed", "literal", "tup")
+
+    def __init__(self, unit: Optional[Unit] = None, *, mixed=None,
+                 literal: bool = False, tup=None) -> None:
+        self.unit = unit
+        self.mixed = mixed  # frozenset[Unit] | None
+        self.literal = literal
+        self.tup = tup  # tuple[Unit | None, ...] | None
+
+    @property
+    def concrete(self) -> bool:
+        return self.unit is not None
+
+
+UNKNOWN = Val()
+
+
+def _render_mixed(mixed) -> str:
+    return " | ".join(sorted(u.render() for u in mixed))
+
+
+class Summaries:
+    """Function-summary table with bare-name joins: ``table`` maps a
+    qualname (``Class.method`` or ``func``) to a Unit, a tuple of
+    units, or None (unknown)."""
+
+    def __init__(self, table: Optional[Dict[str, object]] = None) -> None:
+        self.table: Dict[str, object] = dict(table or {})
+        self._bare: Dict[str, object] = {}
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        by_bare: Dict[str, list] = {}
+        for qual, value in self.table.items():
+            by_bare.setdefault(qual.rsplit(".", 1)[-1], []).append(value)
+        self._bare = {
+            name: vals[0]
+            if all(v == vals[0] for v in vals) else None
+            for name, vals in by_bare.items()
+        }
+
+    def resolve(self, bare: str, qual: Optional[str] = None):
+        if qual is not None and qual in self.table:
+            return self.table[qual]
+        return self._bare.get(bare)
+
+    def digest(self) -> str:
+        lines = []
+        for qual in sorted(self.table):
+            value = self.table[qual]
+            if isinstance(value, tuple):
+                rendered = ",".join(
+                    u.render() if u else "?" for u in value
+                )
+            else:
+                rendered = value.render() if value else "?"
+            lines.append(f"{qual}={rendered}")
+        return hashlib.sha256("\n".join(lines).encode()).hexdigest()
+
+
+def _collect_functions(tree: ast.Module):
+    """All (qualname, node, class_name) triples, nested defs included
+    (their qualname is dotted through the enclosing function)."""
+    out: List[Tuple[str, ast.AST, Optional[str]]] = []
+
+    def visit(body, prefix: str, cls: Optional[str]) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{node.name}"
+                out.append((qual, node, cls))
+                visit(node.body, f"{qual}.", None)
+            elif isinstance(node, ast.ClassDef):
+                visit(node.body, f"{node.name}.", node.name)
+
+    visit(tree.body, "", None)
+    return out
+
+
+class _Ctx:
+    def __init__(self, path: str, summaries: Summaries,
+                 emit_enabled: bool = True) -> None:
+        self.path = path
+        self.summaries = summaries
+        self.emit_enabled = emit_enabled
+        self.findings: List[Finding] = []
+        self._seen: set = set()
+
+    def emit(self, line: int, code: str, message: str) -> None:
+        if not self.emit_enabled:
+            return
+        key = (line, code, message)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(Finding(self.path, line, code, message))
+
+
+class _FuncFlow:
+    """Abstract interpretation of one function (or the module body)."""
+
+    def __init__(self, ctx: _Ctx, node, cls: Optional[str],
+                 qual: Optional[str]) -> None:
+        self.ctx = ctx
+        self.node = node
+        self.cls = cls
+        self.qual = qual
+        self.returns: List[Val] = []
+
+    # -- entry points ------------------------------------------------------
+
+    def run(self) -> List[Val]:
+        env = self._param_env()
+        # two passes stabilize loop-carried units; findings dedup in ctx
+        self._exec_block(self.node.body, env)
+        self._exec_block(self.node.body, self._param_env())
+        return self.returns
+
+    def run_module(self) -> None:
+        env: Dict[str, Val] = {}
+        body = [
+            n for n in self.node.body
+            if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef))
+        ]
+        self._exec_block(body, env)
+
+    def _param_env(self) -> Dict[str, Val]:
+        env: Dict[str, Val] = {}
+        entry = SEED_FUNCS.get(self.qual or "") or SEED_FUNCS.get(
+            getattr(self.node, "name", "") or ""
+        )
+        params = (entry or {}).get("params", {})
+        args = self.node.args
+        for a in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+            unit = params.get(a.arg)
+            if unit is None:
+                unit = lookup_name(a.arg)
+            if unit is not None:
+                env[a.arg] = Val(unit)
+        return env
+
+    # -- statements --------------------------------------------------------
+
+    def _exec_block(self, body, env: Dict[str, Val]) -> None:
+        for stmt in body:
+            self._exec(stmt, env)
+
+    def _exec(self, stmt, env: Dict[str, Val]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # analyzed via their own _FuncFlow
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self.returns.append(self._eval(stmt.value, env))
+            return
+        if isinstance(stmt, ast.Assign):
+            val = self._eval(stmt.value, env)
+            for target in stmt.targets:
+                self._assign(target, val, stmt.value, env)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                val = self._eval(stmt.value, env)
+                self._assign(stmt.target, val, stmt.value, env)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._aug_assign(stmt, env)
+            return
+        if isinstance(stmt, ast.Expr):
+            self._eval(stmt.value, env)
+            return
+        if isinstance(stmt, ast.If):
+            self._eval(stmt.test, env)
+            then_env = dict(env)
+            self._exec_block(stmt.body, then_env)
+            else_env = dict(env)
+            self._exec_block(stmt.orelse, else_env)
+            merged = self._merge(then_env, else_env)
+            env.clear()
+            env.update(merged)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            itv = self._eval(stmt.iter, env)
+            loop_env = dict(env)
+            # the element of a united container shares its unit
+            self._assign(stmt.target, Val(itv.unit), None, loop_env)
+            self._exec_block(stmt.body, loop_env)
+            self._exec_block(stmt.body, loop_env)
+            merged = self._merge(env, loop_env)
+            env.clear()
+            env.update(merged)
+            self._exec_block(stmt.orelse, env)
+            return
+        if isinstance(stmt, ast.While):
+            self._eval(stmt.test, env)
+            loop_env = dict(env)
+            self._exec_block(stmt.body, loop_env)
+            self._exec_block(stmt.body, loop_env)
+            merged = self._merge(env, loop_env)
+            env.clear()
+            env.update(merged)
+            self._exec_block(stmt.orelse, env)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._eval(item.context_expr, env)
+                if item.optional_vars is not None:
+                    self._assign(item.optional_vars, UNKNOWN, None, env)
+            self._exec_block(stmt.body, env)
+            return
+        if isinstance(stmt, ast.Try):
+            self._exec_block(stmt.body, env)
+            for handler in stmt.handlers:
+                self._exec_block(handler.body, env)
+            self._exec_block(stmt.orelse, env)
+            self._exec_block(stmt.finalbody, env)
+            return
+        if isinstance(stmt, (ast.Raise, ast.Assert)):
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._eval(child, env)
+            return
+        if isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    env.pop(t.id, None)
+            return
+        # match statements, global/nonlocal, pass, imports, ...
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._eval(child, env)
+            elif isinstance(child, ast.stmt):
+                self._exec(child, env)
+            elif isinstance(child, (ast.match_case,)):
+                case_env = dict(env)
+                self._exec_block(child.body, case_env)
+                merged = self._merge(env, case_env)
+                env.clear()
+                env.update(merged)
+
+    @staticmethod
+    def _merge(env_a: Dict[str, Val], env_b: Dict[str, Val]):
+        out: Dict[str, Val] = {}
+        for name in sorted(env_a.keys() & env_b.keys()):
+            va, vb = env_a[name], env_b[name]
+            if va.unit is not None and va.unit == vb.unit:
+                out[name] = Val(va.unit)
+            elif va.unit is not None and vb.unit is not None:
+                out[name] = Val(mixed=frozenset((va.unit, vb.unit)))
+            elif va.mixed or vb.mixed:
+                both = (va.mixed or frozenset()) | (vb.mixed or frozenset())
+                for v in (va, vb):
+                    if v.unit is not None:
+                        both = both | {v.unit}
+                out[name] = Val(mixed=both)
+            elif va.literal and vb.literal:
+                out[name] = Val(literal=True)
+            elif va.unit is not None or vb.unit is not None:
+                unit = va.unit if va.unit is not None else vb.unit
+                other = vb if va.unit is not None else va
+                # literal on the other path adopts; unknown stays unknown
+                out[name] = Val(unit) if other.literal else UNKNOWN
+        return out
+
+    # -- assignments -------------------------------------------------------
+
+    def _assign(self, target, val: Val, rhs, env: Dict[str, Val]) -> None:
+        if isinstance(target, ast.Name):
+            declared = lookup_name(target.id)
+            self._check_store(target.id, declared, val, rhs,
+                              target.lineno)
+            if declared is not None:
+                env[target.id] = Val(declared)
+            else:
+                env[target.id] = val
+            return
+        if isinstance(target, ast.Attribute):
+            declared = lookup_name(target.attr)
+            self._check_store(target.attr, declared, val, rhs,
+                              target.lineno)
+            if target.attr in BILLING_ATTRS and rhs is not None:
+                self._flag_additive_literals(rhs, target.attr)
+            return
+        if isinstance(target, (ast.Tuple, ast.List)):
+            parts = None
+            if val.tup is not None and len(val.tup) == len(target.elts):
+                parts = [Val(u) for u in val.tup]
+            for i, elt in enumerate(target.elts):
+                self._assign(elt, parts[i] if parts else UNKNOWN,
+                             None, env)
+            return
+        if isinstance(target, ast.Starred):
+            self._assign(target.value, UNKNOWN, None, env)
+            return
+        if isinstance(target, ast.Subscript):
+            self._eval(target.value, env)
+            self._eval(target.slice, env)
+
+    def _check_store(self, name: str, declared: Optional[Unit],
+                     val: Val, rhs, line: int) -> None:
+        if declared is None:
+            return
+        kind = "expression"
+        if isinstance(rhs, ast.BinOp):
+            if isinstance(rhs.op, ast.Mult):
+                kind = "product"
+            elif isinstance(rhs.op, (ast.Div, ast.FloorDiv)):
+                kind = "quotient"
+        if val.mixed:
+            self.ctx.emit(
+                line, "RL102",
+                f"'{name}' is suffixed {declared.render()} but holds "
+                f"mixed units across branches "
+                f"({_render_mixed(val.mixed)}); rename or unify",
+            )
+            return
+        if val.concrete and not val.literal and val.unit != declared:
+            self.ctx.emit(
+                line, "RL102",
+                f"{kind} of unit {val.unit.render()} assigned to "
+                f"'{name}', whose name declares {declared.render()}",
+            )
+
+    def _aug_assign(self, stmt: ast.AugAssign, env: Dict[str, Val]) -> None:
+        target = stmt.target
+        if isinstance(target, ast.Name):
+            cur = env.get(target.id)
+            if cur is None:
+                unit = lookup_name(target.id)
+                cur = Val(unit) if unit else UNKNOWN
+        elif isinstance(target, ast.Attribute):
+            unit = lookup_name(target.attr)
+            cur = Val(unit) if unit else UNKNOWN
+        else:
+            cur = UNKNOWN
+        rv = self._eval(stmt.value, env)
+        opname = type(stmt.op).__name__
+        if isinstance(stmt.op, (ast.Add, ast.Sub)):
+            result = self._combine_add(cur, rv, stmt.lineno, opname)
+            if isinstance(target, ast.Attribute) and \
+                    target.attr in BILLING_ATTRS:
+                self._flag_additive_literals(stmt.value, target.attr)
+        elif isinstance(stmt.op, ast.Mult):
+            result = self._combine_mul(cur, rv)
+        elif isinstance(stmt.op, (ast.Div, ast.FloorDiv)):
+            result = self._combine_div(cur, rv)
+        else:
+            result = UNKNOWN
+        if isinstance(target, ast.Name):
+            declared = lookup_name(target.id)
+            self._check_store(target.id, declared, result, stmt, stmt.lineno)
+            env[target.id] = Val(declared) if declared else result
+        elif isinstance(target, ast.Attribute):
+            declared = lookup_name(target.attr)
+            self._check_store(target.attr, declared, result, stmt,
+                              stmt.lineno)
+
+    # -- expressions -------------------------------------------------------
+
+    def _eval(self, node, env: Dict[str, Val]) -> Val:
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, (int, float)) and not isinstance(
+                node.value, bool
+            ):
+                return Val(literal=True)
+            return UNKNOWN
+        if isinstance(node, ast.Name):
+            if node.id in env:
+                return env[node.id]
+            unit = lookup_name(node.id)
+            return Val(unit) if unit else UNKNOWN
+        if isinstance(node, ast.Attribute):
+            self._eval(node.value, env)
+            unit = lookup_name(node.attr)
+            return Val(unit) if unit else UNKNOWN
+        if isinstance(node, ast.BinOp):
+            return self._eval_binop(node, env)
+        if isinstance(node, ast.UnaryOp):
+            v = self._eval(node.operand, env)
+            if isinstance(node.op, (ast.UAdd, ast.USub)):
+                return v
+            return UNKNOWN
+        if isinstance(node, ast.Compare):
+            return self._eval_compare(node, env)
+        if isinstance(node, ast.Call):
+            return self._eval_call(node, env)
+        if isinstance(node, ast.IfExp):
+            self._eval(node.test, env)
+            a = self._eval(node.body, env)
+            b = self._eval(node.orelse, env)
+            if a.unit is not None and a.unit == b.unit:
+                return Val(a.unit)
+            if a.unit is not None and (b.literal or b.unit is None):
+                return Val(a.unit) if b.literal else UNKNOWN
+            if b.unit is not None and a.literal:
+                return Val(b.unit)
+            return UNKNOWN
+        if isinstance(node, ast.Tuple):
+            vals = [self._eval(e, env) for e in node.elts]
+            return Val(tup=tuple(v.unit for v in vals))
+        if isinstance(node, ast.Subscript):
+            v = self._eval(node.value, env)
+            self._eval(node.slice, env)
+            if v.tup is not None and isinstance(node.slice, ast.Constant) \
+                    and isinstance(node.slice.value, int) \
+                    and -len(v.tup) <= node.slice.value < len(v.tup):
+                elem = v.tup[node.slice.value]
+                return Val(elem) if elem is not None else UNKNOWN
+            # an element of a united container carries the same unit
+            return Val(v.unit) if v.unit is not None else UNKNOWN
+        if isinstance(node, ast.BoolOp):
+            for v in node.values:
+                self._eval(v, env)
+            return UNKNOWN
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            comp_env = dict(env)
+            for gen in node.generators:
+                self._eval(gen.iter, comp_env)
+                self._assign(gen.target, UNKNOWN, None, comp_env)
+                for cond in gen.ifs:
+                    self._eval(cond, comp_env)
+            if isinstance(node, ast.DictComp):
+                self._eval(node.key, comp_env)
+                self._eval(node.value, comp_env)
+            else:
+                self._eval(node.elt, comp_env)
+            return UNKNOWN
+        if isinstance(node, ast.Lambda):
+            return UNKNOWN
+        if isinstance(node, (ast.NamedExpr,)):
+            v = self._eval(node.value, env)
+            self._assign(node.target, v, node.value, env)
+            return v
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._eval(child, env)
+        return UNKNOWN
+
+    def _eval_binop(self, node: ast.BinOp, env) -> Val:
+        lv = self._eval(node.left, env)
+        rv = self._eval(node.right, env)
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            return self._combine_add(lv, rv, node.lineno,
+                                     type(node.op).__name__)
+        if isinstance(node.op, ast.Mult):
+            return self._combine_mul(lv, rv)
+        if isinstance(node.op, (ast.Div, ast.FloorDiv)):
+            return self._combine_div(lv, rv)
+        if isinstance(node.op, ast.Mod):
+            return Val(lv.unit) if lv.concrete else rv
+        if isinstance(node.op, ast.Pow):
+            if lv.concrete and isinstance(node.right, ast.Constant) \
+                    and isinstance(node.right.value, int):
+                return Val(lv.unit ** node.right.value)
+            if lv.concrete and lv.unit == DIMENSIONLESS:
+                return Val(DIMENSIONLESS)
+            return UNKNOWN
+        return UNKNOWN
+
+    def _combine_add(self, lv: Val, rv: Val, line: int,
+                     opname: str) -> Val:
+        op = {"Add": "+", "Sub": "-"}.get(opname, opname)
+        for v, other in ((lv, rv), (rv, lv)):
+            if v.mixed and (other.concrete or other.mixed):
+                self.ctx.emit(
+                    line, "RL101",
+                    f"operand of '{op}' holds mixed units across "
+                    f"branches ({_render_mixed(v.mixed)})",
+                )
+                return UNKNOWN
+        if lv.concrete and rv.concrete and lv.unit != rv.unit:
+            self.ctx.emit(
+                line, "RL101",
+                f"'{op}' mixes {lv.unit.render()} and "
+                f"{rv.unit.render()}",
+            )
+            return UNKNOWN
+        if lv.concrete:
+            return Val(lv.unit)
+        if rv.concrete:
+            return Val(rv.unit)
+        if lv.literal and rv.literal:
+            return Val(literal=True)
+        return UNKNOWN
+
+    @staticmethod
+    def _combine_mul(lv: Val, rv: Val) -> Val:
+        if lv.literal and rv.literal:
+            return Val(literal=True)
+        if lv.literal and rv.concrete:
+            return Val(rv.unit)
+        if rv.literal and lv.concrete:
+            return Val(lv.unit)
+        if lv.concrete and rv.concrete:
+            return Val(lv.unit * rv.unit)
+        return UNKNOWN
+
+    @staticmethod
+    def _combine_div(lv: Val, rv: Val) -> Val:
+        if lv.literal and rv.literal:
+            return Val(literal=True)
+        if lv.concrete and rv.literal:
+            return Val(lv.unit)
+        if lv.literal and rv.concrete:
+            return Val(DIMENSIONLESS / rv.unit)
+        if lv.concrete and rv.concrete:
+            return Val(lv.unit / rv.unit)
+        return UNKNOWN
+
+    def _eval_compare(self, node: ast.Compare, env) -> Val:
+        vals = [self._eval(node.left, env)]
+        for comp in node.comparators:
+            vals.append(self._eval(comp, env))
+        for (a, b), op in zip(zip(vals, vals[1:]), node.ops):
+            if isinstance(op, (ast.In, ast.NotIn, ast.Is, ast.IsNot,
+                               ast.Eq, ast.NotEq)):
+                continue
+            sym = {"Lt": "<", "LtE": "<=", "Gt": ">",
+                   "GtE": ">="}.get(type(op).__name__, "cmp")
+            for v, other in ((a, b), (b, a)):
+                if v.mixed and (other.concrete or other.mixed):
+                    self.ctx.emit(
+                        node.lineno, "RL101",
+                        f"operand of '{sym}' holds mixed units across "
+                        f"branches ({_render_mixed(v.mixed)})",
+                    )
+            if a.concrete and b.concrete and a.unit != b.unit:
+                self.ctx.emit(
+                    node.lineno, "RL101",
+                    f"'{sym}' compares {a.unit.render()} with "
+                    f"{b.unit.render()}",
+                )
+        return UNKNOWN
+
+    # -- calls -------------------------------------------------------------
+
+    def _call_name(self, func) -> Tuple[Optional[str], Optional[str]]:
+        if isinstance(func, ast.Name):
+            return func.id, func.id
+        if isinstance(func, ast.Attribute):
+            qual = None
+            if isinstance(func.value, ast.Name) and func.value.id == "self" \
+                    and self.cls:
+                qual = f"{self.cls}.{func.attr}"
+            return func.attr, qual
+        return None, None
+
+    def _eval_call(self, node: ast.Call, env) -> Val:
+        bare, qual = self._call_name(node.func)
+        if not isinstance(node.func, ast.Name):
+            self._eval(node.func, env)
+        arg_vals = [self._eval(a, env) for a in node.args
+                    if not isinstance(a, ast.Starred)]
+        kw_vals = {kw.arg: self._eval(kw.value, env)
+                   for kw in node.keywords if kw.arg is not None}
+        for kw in node.keywords:
+            if kw.arg is None:
+                self._eval(kw.value, env)
+
+        if bare in _EXTREMUM_CALLS and len(node.args) >= 2:
+            result = UNKNOWN
+            for i, v in enumerate(arg_vals[1:], start=1):
+                prev = arg_vals[i - 1]
+                if prev.concrete and v.concrete and prev.unit != v.unit:
+                    self.ctx.emit(
+                        node.lineno, "RL101",
+                        f"'{bare}' mixes {prev.unit.render()} and "
+                        f"{v.unit.render()}",
+                    )
+            for v in arg_vals:
+                if v.concrete:
+                    result = Val(v.unit)
+                    break
+            else:
+                if arg_vals and all(v.literal for v in arg_vals):
+                    result = Val(literal=True)
+            return result
+        if bare in _PASSTHROUGH_CALLS and arg_vals:
+            return arg_vals[0]
+        if bare == "len":
+            return Val(DIMENSIONLESS)
+        if bare in ("sum", "fsum") and node.args and isinstance(
+            node.args[0], (ast.GeneratorExp, ast.ListComp)
+        ):
+            # a sum over a comprehension carries its element's unit
+            comp = node.args[0]
+            comp_env = dict(env)
+            for gen in comp.generators:
+                self._assign(gen.target, UNKNOWN, None, comp_env)
+            elt = self._eval(comp.elt, comp_env)
+            return Val(elt.unit) if elt.concrete else UNKNOWN
+        if bare == "sum":
+            return UNKNOWN
+
+        entry = None
+        if qual is not None and qual in SEED_FUNCS:
+            entry = SEED_FUNCS[qual]
+        elif bare is not None and bare in SEED_FUNCS:
+            entry = SEED_FUNCS[bare]
+        elif bare is not None:
+            dotted = [v for k, v in sorted(SEED_FUNCS.items())
+                      if k.endswith(f".{bare}")]
+            if len(dotted) == 1:
+                entry = dotted[0]
+
+        seen_params: set = set()
+        if entry is not None:
+            params: Dict[str, Unit] = entry.get("params", {})
+            order: List[str] = entry.get("order", [])
+            sink = bool(entry.get("billing_sink"))
+            bound: List[Tuple[str, Val, ast.AST]] = []
+            for i, a in enumerate(node.args):
+                if isinstance(a, ast.Starred) or i >= len(order):
+                    continue
+                bound.append((order[i], arg_vals[i], a))
+            for kw in node.keywords:
+                if kw.arg is not None and kw.arg in params:
+                    bound.append((kw.arg, kw_vals[kw.arg], kw.value))
+            for pname, v, arg_node in bound:
+                want = params.get(pname)
+                if want is None:
+                    continue
+                seen_params.add(pname)
+                if v.concrete and not v.literal and v.unit != want:
+                    self.ctx.emit(
+                        arg_node.lineno, "RL101",
+                        f"argument '{pname}' of {bare} expects "
+                        f"{want.render()}, got {v.unit.render()}",
+                    )
+                if v.mixed:
+                    self.ctx.emit(
+                        arg_node.lineno, "RL101",
+                        f"argument '{pname}' of {bare} holds mixed "
+                        f"units across branches "
+                        f"({_render_mixed(v.mixed)})",
+                    )
+                if sink and want is not None and (
+                    "usd" in dict(want.dims) or want == CHIP_S
+                ):
+                    self._flag_additive_literals(arg_node,
+                                                 f"{bare}({pname}=...)")
+
+        # kwargs whose NAME declares a unit are checked on every call
+        for kw in node.keywords:
+            if kw.arg is None or kw.arg in seen_params:
+                continue
+            want = lookup_name(kw.arg)
+            if want is None:
+                continue
+            v = kw_vals[kw.arg]
+            if v.concrete and not v.literal and v.unit != want:
+                self.ctx.emit(
+                    kw.value.lineno, "RL101",
+                    f"keyword '{kw.arg}' declares {want.render()}, "
+                    f"got {v.unit.render()}",
+                )
+            if v.mixed:
+                self.ctx.emit(
+                    kw.value.lineno, "RL101",
+                    f"keyword '{kw.arg}' holds mixed units across "
+                    f"branches ({_render_mixed(v.mixed)})",
+                )
+
+        if entry is not None:
+            ret = entry.get("return")
+            if ret is not None:
+                return Val(ret)
+            return UNKNOWN
+        if bare is not None:
+            summary = self.ctx.summaries.resolve(bare, qual)
+            if isinstance(summary, Unit):
+                return Val(summary)
+            if isinstance(summary, tuple):
+                return Val(tup=summary)
+        return UNKNOWN
+
+    def _flag_additive_literals(self, node, sink: str) -> None:
+        for line, value in _additive_literals(node):
+            self.ctx.emit(
+                line, "RL103",
+                f"numeric literal {value!r} flows into billing sink "
+                f"'{sink}' in an additive position; bind it to a "
+                f"unit-suffixed name first",
+            )
+
+
+def _additive_literals(node):
+    """Non-zero numeric literals in additive positions of ``node`` —
+    direct value, ``+``/``-`` operands, min/max/abs arguments, ternary
+    branches. Multiplicative factors (``* 1.5``, ``/ 3600.0``) are
+    conversion constants and stay out."""
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, (int, float)) and not isinstance(
+            node.value, bool
+        ) and node.value != 0:
+            yield node.lineno, node.value
+        return
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.Add, ast.Sub)
+    ):
+        yield from _additive_literals(node.left)
+        yield from _additive_literals(node.right)
+        return
+    if isinstance(node, ast.UnaryOp) and isinstance(
+        node.op, (ast.UAdd, ast.USub)
+    ):
+        yield from _additive_literals(node.operand)
+        return
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("min", "max", "abs"):
+        for a in node.args:
+            yield from _additive_literals(a)
+        return
+    if isinstance(node, ast.IfExp):
+        yield from _additive_literals(node.body)
+        yield from _additive_literals(node.orelse)
+
+
+# --- interprocedural summaries --------------------------------------------
+
+def _summary_of(returns: List[Val], name: str):
+    units = {v.unit for v in returns if v.unit is not None}
+    tups = {v.tup for v in returns if v.tup is not None}
+    if len(units) == 1 and not tups:
+        return next(iter(units))
+    if len(tups) == 1 and not units:
+        return next(iter(tups))
+    # the function's own name-suffix is the fallback annotation
+    return unit_from_name(name)
+
+
+def compute_summaries(trees, base: Optional[Dict[str, object]] = None,
+                      max_iter: int = 12) -> Dict[str, object]:
+    """Fixed point of per-function return-unit summaries over the call
+    graph spanned by ``trees`` (an iterable of ast.Module)."""
+    funcs = []
+    for tree in trees:
+        funcs.extend(_collect_functions(tree))
+    table: Dict[str, object] = dict(base or {})
+    for _ in range(max_iter):
+        changed = False
+        summaries = Summaries(table)
+        for qual, node, cls in funcs:
+            ctx = _Ctx("<summary>", summaries, emit_enabled=False)
+            flow = _FuncFlow(ctx, node, cls, qual)
+            value = _summary_of(flow.run(), node.name)
+            if table.get(qual, "∅") != value:
+                table[qual] = value
+                changed = True
+        if not changed:
+            break
+    return table
+
+
+# --- project-level summary index ------------------------------------------
+
+_PROJECT_ROOT: Optional[Path] = None
+_INDEX_CACHE: Dict[tuple, Tuple[Dict[str, object], str]] = {}
+
+
+def set_project_root(root: Optional[Path]) -> None:
+    """Attach (or detach, with None) the repo root whose ``core/`` +
+    ``launch/`` call graph feeds cross-module summaries."""
+    global _PROJECT_ROOT
+    _PROJECT_ROOT = Path(root) if root is not None else None
+
+
+def reset_project_cache() -> None:
+    _INDEX_CACHE.clear()
+
+
+def _project_files() -> List[Path]:
+    if _PROJECT_ROOT is None:
+        return []
+    out: List[Path] = []
+    for scope in SUMMARY_SCOPE:
+        d = _PROJECT_ROOT / scope
+        if d.is_dir():
+            out.extend(sorted(d.rglob("*.py")))
+    return [p for p in out if "__pycache__" not in p.parts]
+
+
+def project_summaries() -> Tuple[Dict[str, object], str]:
+    """(summary table, digest) for the attached project root; empty
+    when detached. Cached per (root, file stats) so repeated lints in
+    one process parse the project once."""
+    files = _project_files()
+    if not files:
+        return {}, ""
+    key_parts = []
+    for p in files:
+        st = p.stat()
+        key_parts.append((str(p), st.st_mtime_ns, st.st_size))
+    key = (str(_PROJECT_ROOT), tuple(key_parts))
+    hit = _INDEX_CACHE.get(key)
+    if hit is not None:
+        return hit
+    trees = []
+    for p in files:
+        try:
+            trees.append(ast.parse(p.read_text()))
+        except SyntaxError:
+            continue  # RL000 reports it; summaries just skip the file
+    table = compute_summaries(trees)
+    digest = Summaries(table).digest()
+    _INDEX_CACHE.clear()
+    _INDEX_CACHE[key] = (table, digest)
+    return table, digest
+
+
+# --- the rule objects ------------------------------------------------------
+
+def unit_findings(tree: ast.Module, path: str) -> List[Finding]:
+    """All RL101/RL102/RL103 findings for one module, memoized on the
+    tree (the three rule objects share one analysis)."""
+    cached = getattr(tree, "_reprolint_unit_findings", None)
+    if cached is not None:
+        return cached
+    base, _digest = project_summaries()
+    local = compute_summaries([tree], base=base)
+    summaries = Summaries({**base, **local})
+    ctx = _Ctx(path, summaries)
+    for qual, node, cls in _collect_functions(tree):
+        returns = _FuncFlow(ctx, node, cls, qual).run()
+        # a function whose NAME declares a unit must return it — this
+        # is how 'predicted_backlog_s returning chip-seconds' surfaces
+        declared = unit_from_name(node.name)
+        units = {v.unit for v in returns if v.unit is not None}
+        if declared is not None and len(units) == 1:
+            got = next(iter(units))
+            if got != declared:
+                ctx.emit(
+                    node.lineno, "RL102",
+                    f"function '{node.name}' is suffixed "
+                    f"{declared.render()} but returns {got.render()}",
+                )
+    _FuncFlow(ctx, tree, None, None).run_module()
+    findings = sorted(ctx.findings, key=lambda f: (f.line, f.code))
+    tree._reprolint_unit_findings = findings
+    return findings
+
+
+class _UnitRule:
+    """Shared shape for the three unit rules; each filters one code
+    out of the shared analysis so per-code suppressions keep working."""
+
+    code = ""
+    title = ""
+
+    def applies(self, path: str) -> bool:
+        return path.startswith(CORE)
+
+    def check(self, tree: ast.Module, path: str) -> List[Finding]:
+        return [f for f in unit_findings(tree, path) if f.code == self.code]
+
+
+class UnitMismatch(_UnitRule):
+    """RL101 — unit-mismatched ``+``/``-``/comparisons (the PR-4
+    initial-context decode pricing class: tokens added to
+    chip-seconds)."""
+
+    code = "RL101"
+    title = "unit-mismatched additive/comparison operands"
+
+
+class UnitAssignment(_UnitRule):
+    """RL102 — a wrong-dimension product/quotient assigned to a
+    unit-suffixed name (the PR-2 pool-chips-vs-slice-chips class and
+    the PR-5 fused-split class)."""
+
+    code = "RL102"
+    title = "wrong-dimension expression assigned to unit-suffixed name"
+
+
+class UnitLiteral(_UnitRule):
+    """RL103 — an unannotated numeric literal flowing additively into
+    a billing sink (the PR-3 billed-compile-seconds class)."""
+
+    code = "RL103"
+    title = "raw numeric literal flows into a billing sink"

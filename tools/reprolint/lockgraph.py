@@ -1,0 +1,444 @@
+"""RL006 — lock-order (ABBA deadlock) analysis.
+
+Builds the lock-acquisition graph of the threaded core modules from
+the same ``_GUARDED_BY`` registries the RL001 rule and the runtime
+sanitizer read, plus the ``threading.Lock/RLock/Condition`` attributes
+assigned in ``__init__``. A node is one lock, named ``Class.attr``
+(``Condition(self._mu)`` aliases to its underlying lock, exactly as
+``_GUARDED_BY`` treats ``("_mu", "_cv")`` as one guard). An edge
+``A -> B`` means some code path acquires B while holding A — directly
+via nested ``with self.<lock>:`` blocks or ``.acquire()`` calls, or
+transitively through a method call whose **acquisition summary**
+(fixed point over the call graph) includes B.
+
+Any cycle in that graph is a potential ABBA deadlock: two threads
+walking the cycle from different entry points can each hold the lock
+the other needs. The derived acyclic graph also yields the canonical
+**lock hierarchy** (``lock_ranks``) that ``repro.core.sanitize``
+enforces at runtime under ``REPRO_SANITIZE=1`` — one static analysis,
+two enforcement points.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from . import Finding
+
+CORE = "src/repro/core/"
+#: the threaded modules whose cross-file call graph forms one lock
+#: hierarchy (everything else is analyzed file-locally)
+LOCK_FILES = (
+    "src/repro/core/live.py",
+    "src/repro/core/scheduler.py",
+    "src/repro/core/calibration.py",
+)
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore",
+               "BoundedSemaphore"}
+
+
+class LockGraph:
+    """Nodes are ``Class.attr`` lock names; ``edges[(a, b)]`` holds the
+    first (path, line) site where b was acquired under a."""
+
+    def __init__(self) -> None:
+        self.nodes: Set[str] = set()
+        self.edges: Dict[Tuple[str, str], Tuple[str, int]] = {}
+
+    def add_edge(self, a: str, b: str, site: Tuple[str, int]) -> None:
+        if a == b:
+            return  # reentrancy is the sanitizer's territory, not ABBA
+        self.nodes.update((a, b))
+        if (a, b) not in self.edges or site < self.edges[(a, b)]:
+            self.edges[(a, b)] = site
+
+    def successors(self, a: str) -> List[str]:
+        return sorted(b for (x, b) in self.edges if x == a)
+
+
+class _ClassLocks:
+    """Lock attributes of one class: canonical names plus the alias
+    map (``_cv -> _mu`` when ``self._cv = Condition(self._mu)``)."""
+
+    def __init__(self, cls: ast.ClassDef) -> None:
+        # imported here, not at module level: rules.py builds its RULES
+        # list from this module, so a top-level import would be circular
+        from .rules import _parse_registry
+
+        self.name = cls.name
+        attrs: Set[str] = set()
+        for locks in _parse_registry(cls).values():
+            attrs.update(locks)
+        self.alias: Dict[str, str] = {}
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Assign):
+                continue
+            value = node.value
+            if not (isinstance(value, ast.Call)
+                    and self._ctor_name(value.func) in _LOCK_CTORS):
+                continue
+            for t in node.targets:
+                attr = _self_attr(t)
+                if attr is None:
+                    continue
+                attrs.add(attr)
+                if self._ctor_name(value.func) == "Condition" and \
+                        value.args:
+                    inner = _self_attr(value.args[0])
+                    if inner is not None:
+                        attrs.add(inner)
+                        self.alias[attr] = inner
+        self.attrs = attrs
+
+    @staticmethod
+    def _ctor_name(func: ast.AST) -> Optional[str]:
+        if isinstance(func, ast.Attribute):
+            return func.attr
+        if isinstance(func, ast.Name):
+            return func.id
+        return None
+
+    def node_for(self, attr: str) -> Optional[str]:
+        if attr not in self.attrs:
+            return None
+        return f"{self.name}.{self.alias.get(attr, attr)}"
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+class _Site:
+    """One call site inside a method: bare callee name, the locks held
+    at the call, whether it is a ``self.`` call, and its location."""
+
+    __slots__ = ("callee", "held", "is_self", "path", "line")
+
+    def __init__(self, callee, held, is_self, path, line):
+        self.callee = callee
+        self.held = held
+        self.is_self = is_self
+        self.path = path
+        self.line = line
+
+
+class _Method:
+    __slots__ = ("qual", "cls", "name", "direct", "calls")
+
+    def __init__(self, qual, cls, name):
+        self.qual = qual
+        self.cls = cls
+        self.name = name
+        self.direct: Set[str] = set()  # lock nodes acquired directly
+        self.calls: List[_Site] = []
+
+
+def _scan_method(meth: _Method, fn, locks: _ClassLocks, path: str,
+                 graph: LockGraph) -> None:
+    """Record direct acquisitions, direct nested-with edges, and call
+    sites with their held-lock snapshots."""
+
+    def walk(nodes, held: frozenset) -> None:
+        for node in (nodes if isinstance(nodes, list) else [nodes]):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                acquired: Set[str] = set()
+                for item in node.items:
+                    attr = _self_attr(item.context_expr)
+                    lock = locks.node_for(attr) if attr else None
+                    if lock is not None:
+                        acquired.add(lock)
+                    else:
+                        walk(item.context_expr, held)
+                for lock in sorted(acquired):
+                    meth.direct.add(lock)
+                    for h in sorted(held):
+                        graph.add_edge(h, lock, (path, node.lineno))
+                walk(node.body, held | acquired)
+                continue
+            if isinstance(node, ast.Call):
+                fname = None
+                is_self = False
+                if isinstance(node.func, ast.Attribute):
+                    # self._lock.acquire() is a direct acquisition
+                    if node.func.attr == "acquire":
+                        attr = _self_attr(node.func.value)
+                        lock = locks.node_for(attr) if attr else None
+                        if lock is not None:
+                            meth.direct.add(lock)
+                            for h in sorted(held):
+                                graph.add_edge(h, lock,
+                                               (path, node.lineno))
+                            continue
+                    fname = node.func.attr
+                    base = node.func.value
+                    is_self = isinstance(base, ast.Name) and \
+                        base.id == "self"
+                elif isinstance(node.func, ast.Name):
+                    fname = node.func.id
+                if fname is not None:
+                    meth.calls.append(_Site(fname, held, is_self, path,
+                                            node.lineno))
+                for child in ast.iter_child_nodes(node):
+                    walk(child, held)
+                continue
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                # a nested def runs later: nothing is held then, and
+                # its acquisitions are not part of THIS method's call
+                body = node.body if isinstance(node.body, list) \
+                    else [node.body]
+                nested = _Method(f"{meth.qual}.<nested>", meth.cls,
+                                 node.name if hasattr(node, "name")
+                                 else "<lambda>")
+                _scan_nested(nested, body, locks, path, graph)
+                continue
+            for child in ast.iter_child_nodes(node):
+                walk(child, held)
+
+    walk(fn.body, frozenset())
+
+
+def _scan_nested(meth: _Method, body, locks, path, graph) -> None:
+    class _Shim:
+        pass
+
+    shim = _Shim()
+    shim.body = body
+    _scan_method(meth, shim, locks, path, graph)
+
+
+def build_lock_graph(
+    named_trees: List[Tuple[str, ast.Module]],
+) -> LockGraph:
+    """The combined lock-acquisition graph over ``named_trees`` (a list
+    of (repo-relative path, parsed module))."""
+    graph = LockGraph()
+    methods: List[_Method] = []
+    for path, tree in named_trees:
+        for cls in tree.body:
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            locks = _ClassLocks(cls)
+            if not locks.attrs:
+                continue
+            for stmt in cls.body:
+                if not isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                meth = _Method(f"{cls.name}.{stmt.name}", cls.name,
+                               stmt.name)
+                _scan_method(meth, stmt, locks, path, graph)
+                methods.append(meth)
+
+    # acquisition summaries: fixed point over the (name-resolved) call
+    # graph — sets only grow, so this terminates
+    by_name: Dict[str, List[_Method]] = {}
+    by_qual: Dict[str, _Method] = {}
+    for m in methods:
+        by_name.setdefault(m.name, []).append(m)
+        by_qual[m.qual] = m
+    summaries: Dict[str, Set[str]] = {m.qual: set(m.direct)
+                                      for m in methods}
+
+    def resolve(site: _Site, cls: str) -> List[_Method]:
+        if site.is_self and f"{cls}.{site.callee}" in by_qual:
+            return [by_qual[f"{cls}.{site.callee}"]]
+        return by_name.get(site.callee, [])
+
+    changed = True
+    while changed:
+        changed = False
+        for m in methods:
+            acc = summaries[m.qual]
+            before = len(acc)
+            for site in m.calls:
+                for callee in resolve(site, m.cls):
+                    acc |= summaries[callee.qual]
+            if len(acc) != before:
+                changed = True
+
+    # edges induced by calls made while holding locks
+    for m in methods:
+        for site in m.calls:
+            if not site.held:
+                continue
+            acquired: Set[str] = set()
+            for callee in resolve(site, m.cls):
+                acquired |= summaries[callee.qual]
+            for h in sorted(site.held):
+                for b in sorted(acquired):
+                    graph.add_edge(h, b, (site.path, site.line))
+    return graph
+
+
+def find_cycles(graph: LockGraph) -> List[dict]:
+    """Strongly connected components of size > 1, each a potential
+    ABBA deadlock. Deterministic: nodes and edges sorted."""
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on_stack: Set[str] = set()
+    stack: List[str] = []
+    sccs: List[List[str]] = []
+    counter = [0]
+
+    def strongconnect(v: str) -> None:
+        # iterative Tarjan (the live call graph is small, but recursion
+        # limits are not a contract we want to depend on)
+        work = [(v, iter(graph.successors(v)))]
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack.add(v)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(graph.successors(w))))
+                    advanced = True
+                    break
+                if w in on_stack:
+                    low[node] = min(low[node], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+            if low[node] == index[node]:
+                scc = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    scc.append(w)
+                    if w == node:
+                        break
+                if len(scc) > 1:
+                    sccs.append(sorted(scc))
+
+    for v in sorted(graph.nodes):
+        if v not in index:
+            strongconnect(v)
+
+    out = []
+    for scc in sorted(sccs):
+        members = set(scc)
+        edges = sorted(
+            (site, a, b) for (a, b), site in graph.edges.items()
+            if a in members and b in members
+        )
+        out.append({
+            "locks": scc,
+            "edges": [(a, b, site) for site, a, b in edges],
+            "site": edges[0][0],
+        })
+    return out
+
+
+def lock_ranks(graph: LockGraph) -> Dict[str, int]:
+    """Topological ranks of an acyclic lock graph: acquire in strictly
+    increasing rank and no ABBA interleaving is possible. Rank =
+    longest path from any source, so every edge strictly increases it.
+    Raises ValueError on a cyclic graph."""
+    if find_cycles(graph):
+        raise ValueError("lock graph has a cycle; no hierarchy exists")
+    ranks: Dict[str, int] = {}
+
+    def rank_of(node: str, trail: Tuple[str, ...] = ()) -> int:
+        if node in ranks:
+            return ranks[node]
+        preds = sorted(a for (a, b) in graph.edges if b == node)
+        r = 0 if not preds else 1 + max(
+            rank_of(p, trail + (node,)) for p in preds
+        )
+        ranks[node] = r
+        return r
+
+    for node in sorted(graph.nodes):
+        rank_of(node)
+    return ranks
+
+
+# --- project-level graph (the three threaded modules) ----------------------
+
+_GRAPH_CACHE: Dict[tuple, LockGraph] = {}
+
+
+def project_lock_graph(root: Path) -> Optional[LockGraph]:
+    """The combined graph over ``LOCK_FILES`` under ``root``, cached on
+    their stats; None when the files are absent (fixture trees)."""
+    files = [(rel, root / rel) for rel in LOCK_FILES]
+    files = [(rel, p) for rel, p in files if p.is_file()]
+    if not files:
+        return None
+    key = tuple(
+        (rel, p.stat().st_mtime_ns, p.stat().st_size) for rel, p in files
+    )
+    hit = _GRAPH_CACHE.get(key)
+    if hit is not None:
+        return hit
+    named = []
+    for rel, p in files:
+        try:
+            named.append((rel, ast.parse(p.read_text())))
+        except SyntaxError:
+            continue
+    graph = build_lock_graph(named)
+    _GRAPH_CACHE.clear()
+    _GRAPH_CACHE[key] = graph
+    return graph
+
+
+def reset_graph_cache() -> None:
+    _GRAPH_CACHE.clear()
+
+
+class LockOrder:
+    """RL006 — fail on any cycle in the lock-acquisition graph. For
+    the three threaded core modules the graph is built jointly (their
+    call graphs interlock); any other core file is analyzed alone, so
+    fixture files self-report their cycles."""
+
+    code = "RL006"
+    title = "lock-order cycle (potential ABBA deadlock)"
+
+    def applies(self, path: str) -> bool:
+        return path.startswith(CORE)
+
+    def check(self, tree: ast.Module, path: str) -> List[Finding]:
+        from .dataflow import _PROJECT_ROOT  # shared root attachment
+
+        if path in LOCK_FILES and _PROJECT_ROOT is not None:
+            graph = project_lock_graph(_PROJECT_ROOT)
+            if graph is None:
+                graph = build_lock_graph([(path, tree)])
+        else:
+            graph = build_lock_graph([(path, tree)])
+        findings = []
+        for cycle in find_cycles(graph):
+            site_path, line = cycle["site"]
+            if site_path != path:
+                continue  # reported once, at its first edge's file
+            chain = ", ".join(
+                f"{a} -> {b} ({p}:{ln})" for a, b, (p, ln) in
+                cycle["edges"]
+            )
+            findings.append(Finding(
+                path, line, self.code,
+                f"lock-order cycle over {{{', '.join(cycle['locks'])}}}"
+                f": {chain} — two threads entering from different ends "
+                f"deadlock (ABBA)",
+            ))
+        return findings

@@ -644,10 +644,23 @@ class SlotsIdentity:
         return False
 
 
-RULES = [
-    LockDiscipline(),
-    VersionKeyedCaches(),
-    Determinism(),
-    SwallowedExceptions(),
-    SlotsIdentity(),
-]
+def _build_rules():
+    # imported late: dataflow/lockgraph import Finding from the package
+    # root and _parse_registry from here
+    from .dataflow import UnitAssignment, UnitLiteral, UnitMismatch
+    from .lockgraph import LockOrder
+
+    return [
+        LockDiscipline(),
+        VersionKeyedCaches(),
+        Determinism(),
+        SwallowedExceptions(),
+        SlotsIdentity(),
+        LockOrder(),
+        UnitMismatch(),
+        UnitAssignment(),
+        UnitLiteral(),
+    ]
+
+
+RULES = _build_rules()

@@ -1,0 +1,282 @@
+"""Unit-of-measure algebra for the RL1xx dataflow rules.
+
+Every billing bug this repo has shipped was a *unit confusion* —
+decode chunks priced at initial context (tokens vs chip-seconds),
+compile seconds leaking into billed walls, pool-chips where
+slice-chips belonged, fused splits that dropped the price factor. The
+checker works in **dimensions**, not scaled units: hours and seconds
+are both time, so ``price_per_chip_hour / 3600.0`` stays well-typed while
+``billed_cs + compile_s`` does not.
+
+Base dimensions: ``s`` (time), ``chips``, ``tokens``, ``usd``. A
+:class:`Unit` is a vector of integer exponents over them —
+``chip_s = chips*s``, ``usd_per_chip_s = usd/(chips*s)``,
+dimensionless = the empty vector.
+
+Units are inferred from three sources, in priority order:
+
+1. the **suffix grammar** on snake_case names (``*_s``, ``*_cs``,
+   ``*_chip_s``, ``*_usd``, ``*_tokens``, ``*_chips``,
+   ``*_per_chip_s``, ``*_ratio``/``*_frac``/... -> dimensionless),
+2. the **seed registry** below: known attribute names and known
+   callable signatures (``CostModel.plan``, ``account_stage``,
+   ``Quote``, ``unpack_fused``, ``price_menu``, calibration EWMAs),
+3. interprocedural **function summaries** computed by
+   ``tools.reprolint.dataflow`` as a fixed point over the call graph
+   of ``core/`` + ``launch/``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Tuple
+
+
+class Unit:
+    """An immutable dimension-exponent vector, e.g. chips^1 * s^1."""
+
+    __slots__ = ("dims",)
+
+    def __init__(self, dims: Iterable[Tuple[str, int]] = ()) -> None:
+        object.__setattr__(
+            self, "dims",
+            tuple(sorted((d, e) for d, e in dims if e != 0)),
+        )
+
+    def __setattr__(self, name, value):  # pragma: no cover - immutability
+        raise AttributeError("Unit is immutable")
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Unit) and self.dims == other.dims
+
+    def __hash__(self) -> int:
+        return hash(self.dims)
+
+    def __mul__(self, other: "Unit") -> "Unit":
+        d = dict(self.dims)
+        for dim, exp in other.dims:
+            d[dim] = d.get(dim, 0) + exp
+        return Unit(d.items())
+
+    def __truediv__(self, other: "Unit") -> "Unit":
+        d = dict(self.dims)
+        for dim, exp in other.dims:
+            d[dim] = d.get(dim, 0) - exp
+        return Unit(d.items())
+
+    def __pow__(self, n: int) -> "Unit":
+        return Unit((d, e * n) for d, e in self.dims)
+
+    @property
+    def dimensionless(self) -> bool:
+        return not self.dims
+
+    def __repr__(self) -> str:
+        return f"Unit({self.render()})"
+
+    def render(self) -> str:
+        """Human name: the repo's canonical spelling where one exists."""
+        canon = _CANONICAL.get(self.dims)
+        if canon is not None:
+            return canon
+        num = [d if e == 1 else f"{d}^{e}" for d, e in self.dims if e > 0]
+        den = [d if e == -1 else f"{d}^{-e}" for d, e in self.dims if e < 0]
+        if not num:
+            num = ["1"]
+        out = "*".join(num)
+        if den:
+            out += "/" + "/".join(den)
+        return out
+
+
+DIMENSIONLESS = Unit()
+S = Unit([("s", 1)])
+CHIPS = Unit([("chips", 1)])
+TOKENS = Unit([("tokens", 1)])
+USD = Unit([("usd", 1)])
+CHIP_S = CHIPS * S
+USD_PER_CHIP_S = USD / CHIP_S
+TOKENS_PER_CHIP = TOKENS / CHIPS
+
+_CANONICAL = {
+    DIMENSIONLESS.dims: "dimensionless",
+    S.dims: "s",
+    CHIPS.dims: "chips",
+    TOKENS.dims: "tokens",
+    USD.dims: "usd",
+    CHIP_S.dims: "chip_s",
+    USD_PER_CHIP_S.dims: "usd_per_chip_s",
+    (USD / S).dims: "usd/s",
+    (TOKENS / S).dims: "tokens/s",
+    (CHIPS * S * S).dims: "chip_s*s",
+}
+
+
+# --- the suffix grammar ----------------------------------------------------
+
+#: one snake_case token -> base unit.  Plural words like ``pools`` or
+#: ``stages`` never match: the token must BE a unit word.
+_ATOMS: Dict[str, Unit] = {
+    "s": S, "sec": S, "secs": S, "second": S, "seconds": S,
+    "hour": S, "hours": S, "hr": S, "hrs": S, "ms": S, "time": S,
+    "chip": CHIPS, "chips": CHIPS,
+    "cs": CHIP_S,
+    "tok": TOKENS, "token": TOKENS, "tokens": TOKENS,
+    "usd": USD,
+}
+#: valid only on the numerator side of a ``per`` expression
+#: (``price_per_chip_s``); a bare trailing ``price`` carries no unit.
+_NUMERATOR_ATOMS: Dict[str, Unit] = {"price": USD, "cost": USD, **_ATOMS}
+#: trailing tokens that declare a name dimensionless by convention
+_DIMLESS_SUFFIXES = {
+    "ratio", "frac", "fraction", "factor", "multiplier", "mult",
+    "share", "pct", "util",
+}
+
+
+def unit_from_name(name: str) -> Optional[Unit]:
+    """Suffix-implied unit of ``name``, or None when the name carries
+    no convention. Grammar (parsed from the end): ``<num>` ``per``
+    ``<den>`` | ``<den>``, each side a run of unit atoms —
+    ``billed_cs`` -> chip_s, ``price_per_chip_s`` -> usd_per_chip_s,
+    ``drift_ratio`` -> dimensionless."""
+    toks = [t for t in name.lower().split("_") if t]
+    if not toks:
+        return None
+    j = len(toks)
+    den: list[Unit] = []
+    while j > 0 and toks[j - 1] in _ATOMS:
+        atom = _ATOMS[toks[j - 1]]
+        # same-dimension repeats collapse: ``drain_time_s`` and
+        # ``submit_time_s`` are seconds, not s^2 (``chip_s`` still
+        # multiplies — distinct dimensions)
+        if not any(a == atom for a in den):
+            den.append(atom)
+        j -= 1
+    if den and j > 0 and toks[j - 1] == "per":
+        j -= 1
+        num: list[Unit] = []
+        while j > 0 and toks[j - 1] in _NUMERATOR_ATOMS:
+            atom = _NUMERATOR_ATOMS[toks[j - 1]]
+            if not any(a == atom for a in num):
+                num.append(atom)
+            j -= 1
+        if not num:
+            return None  # '<nothing> per chip_s' carries no numerator
+        unit = DIMENSIONLESS
+        for u in num:
+            unit = unit * u
+        for u in den:
+            unit = unit / u
+        return unit
+    if den:
+        unit = DIMENSIONLESS
+        for u in den:
+            unit = unit * u
+        return unit
+    if toks[-1] in _DIMLESS_SUFFIXES:
+        return DIMENSIONLESS
+    return None
+
+
+# --- the seed registry -----------------------------------------------------
+
+#: attribute / field names with a repo-wide meaning, consulted for
+#: ``x.<attr>`` loads and stores when the suffix grammar is silent.
+#: (Suffixed attributes — ``startup_s``, ``billed_cs``, ``est_exec_s``
+#: — never need an entry: the grammar already covers them.)
+SEED_ATTRS: Dict[str, Unit] = {
+    # Query / StageEvent / StagePlan billing identities
+    "chip_seconds": CHIP_S,
+    "remaining_chip_seconds": CHIP_S,
+    "chip_seconds_provisioned": CHIP_S,
+    "cost": USD,
+    "est_cost": USD,
+    # timestamps and durations (the 'time' atom covers *_time already;
+    # these are the unsuffixed ones)
+    "latency": S,
+    "queue_wait": S,
+    "start": S,
+    "finish": S,
+    "deadline": S,
+    "remaining": S,
+    # prices
+    "price_per_chip_s": USD_PER_CHIP_S,
+    "price_per_chip_hour": USD_PER_CHIP_S,  # hours are time too
+    "vm_price_per_chip_s": USD_PER_CHIP_S,
+    "cf_price_per_chip_s": USD_PER_CHIP_S,
+    # capacities
+    "chips": CHIPS,
+    "slice_chips": CHIPS,
+    "tokens_per_chip": TOKENS_PER_CHIP,
+    # dimensionless knobs and calibration EWMAs (log-ratios)
+    "speed_factor": DIMENSIONLESS,
+    "price_multiplier": DIMENSIONLESS,
+    "cf_multiplier": DIMENSIONLESS,
+    "drift_bound": DIMENSIONLESS,
+    "retries": DIMENSIONLESS,
+    "preemptions": DIMENSIONLESS,
+}
+
+#: callable name (bare or ``Class.method``) ->
+#:   {"params": {name: Unit}, "order": [positional names after self],
+#:    "return": Unit | tuple[Unit, ...] | None,
+#:    "billing_sink": bool}
+#: ``params`` binds the function body's environment AND types call
+#: arguments; ``billing_sink`` marks calls whose usd/chip_s arguments
+#: must not absorb raw numeric literals (RL103).
+SEED_FUNCS: Dict[str, dict] = {
+    # engine.account_stage — THE billing sink: cost = billed_cs *
+    # price_per_chip_s, appended to the query's stage trace.
+    "account_stage": {
+        "params": {
+            "start": S, "finish": S, "chips": CHIPS,
+            "billed_cs": CHIP_S, "price_per_chip_s": USD_PER_CHIP_S,
+            "retries": DIMENSIONLESS,
+        },
+        "order": ["q", "stage", "cluster", "start", "finish", "chips",
+                  "billed_cs", "price_per_chip_s", "retries"],
+        "return": None,
+        "billing_sink": True,
+    },
+    # cost_model.CostModel — quotes are priced off these
+    "CostModel.chip_seconds": {"params": {"chips": CHIPS},
+                               "order": ["work", "chips"],
+                               "return": CHIP_S},
+    "chip_seconds": {"return": CHIP_S},
+    "CostModel.plan": {"params": {"chips": CHIPS},
+                       "order": ["work", "chips"], "return": None},
+    "exec_time": {"return": S},
+    # insights.Quote / price_menu — the public quote surface
+    "Quote": {
+        "params": {"est_pending_s": S, "est_exec_s": S, "est_cost": USD},
+        "return": None,
+        "billing_sink": True,
+    },
+    "price_menu": {
+        "params": {"vm_chips": CHIPS,
+                   "vm_price_per_chip_s": USD_PER_CHIP_S,
+                   "cf_multiplier": DIMENSIONLESS},
+        "return": None,
+    },
+    # scheduler.unpack_fused — splits one fused bill exactly; both the
+    # shares and the billed totals are billing state.
+    "unpack_fused": {"params": {}, "return": None, "billing_sink": True},
+    # calibration EWMAs are log-ratios: dimensionless by construction
+    "drift_ratio": {"return": DIMENSIONLESS},
+    "observe_drift": {"params": {"predicted_s": S, "measured_s": S},
+                      "return": None},
+    "speed_correction": {"return": DIMENSIONLESS},
+}
+
+#: attribute names that accumulate money / billed chip-seconds: a raw
+#: numeric literal added straight into one of these is RL103 even
+#: outside a registered sink call.
+BILLING_ATTRS = {"cost", "chip_seconds", "est_cost", "billed_cs"}
+
+
+def lookup_name(name: str) -> Optional[Unit]:
+    """Unit implied by a bare name: suffix grammar first, then the
+    seed attribute table."""
+    u = unit_from_name(name)
+    if u is not None:
+        return u
+    return SEED_ATTRS.get(name)
