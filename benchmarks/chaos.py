@@ -1,0 +1,240 @@
+"""The chaos day: fault-injected soak of the convergence control plane.
+
+Runs a seeded multi-thousand-query day through the 3-pool registry with
+worker deaths, provisioning stalls, and persistent slow hosts injected
+(core/chaos.py), and gates on the robustness contract (docs/convergence.md):
+
+  * every query reaches a terminal state — deaths can never strand work,
+  * billing conservation holds over the whole fault-injected population
+    (and REPRO_SANITIZE=1 asserts it again inside the run),
+  * the recorded day REPLAYS bit-identically: same seeds => same event-
+    feed fingerprint and same per-query result hash,
+  * SLA degradation is graceful: the relaxed-deadline violation rate on
+    the chaos day stays within `--grace` of the fault-free baseline.
+
+`--live` adds a thread-backed smoke: a seeded LiveChaos kills real
+worker threads mid-stage; the drain must return with every query
+terminal and the plane's respawn/resume counters moving.
+
+Usage:
+    PYTHONPATH=src python benchmarks/chaos.py --fast --check
+    PYTHONPATH=src python benchmarks/chaos.py --live --check
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.scale import (  # noqa: E402
+    DAY_S,
+    SEED_DAY_QUERIES,
+    _pools3_autoscale,
+    _pools3_specs,
+    _write_bench,
+)
+from repro.core import Policy, SimConfig, Simulation, SLAConfig  # noqa: E402
+from repro.core.chaos import ChaosConfig  # noqa: E402
+from repro.core.query import reset_qids  # noqa: E402
+from repro.core.workload import generate, scaled_patterns  # noqa: E402
+
+
+def _day_cfg(n_target: int, seed: int, chaos: bool) -> SimConfig:
+    cc = None
+    if chaos:
+        cc = ChaosConfig(
+            seed=seed + 1_000,
+            n_deaths=8,              # repeated capacity losses...
+            death_pools=("vm", "spot"),
+            horizon_s=DAY_S,
+            stall_prob=0.4,          # ...whose replacements stall...
+            slow_host_frac=0.1,      # ...on a 10%-degraded fleet
+            slow_factor=1.5,
+        )
+    return SimConfig(
+        policy=Policy.AUTO, use_calibration=False, seed=seed,
+        sla=SLAConfig(vm_overload_threshold=8, preempt_best_effort=True,
+                      spill_enabled=True, spill_back_enabled=True,
+                      spill_back_low_backlog_s=5.0),
+        pools=_pools3_specs(_pools3_autoscale(True)),
+        events=True, chaos=cc,
+    )
+
+
+def _result_hash(res) -> str:
+    """Per-query bit-identity hash (benchmarks/_rowhash.py idiom)."""
+    h = hashlib.sha256()
+    for q in sorted(res.queries, key=lambda q: q.qid):
+        h.update(
+            f"{q.qid}|{q.cost!r}|{q.chip_seconds!r}|{q.finish_time!r}|"
+            f"{q.cluster}|{q.state}|{q.retries}|{q.preemptions}\n".encode()
+        )
+    return h.hexdigest()
+
+
+def _conservation_gap(res) -> float:
+    """|population billed - population traced| / billed (traces are
+    shared by fused members: dedupe by identity)."""
+    traces = {id(q.stage_trace): q.stage_trace
+              for q in res.queries if q.stage_trace}
+    traced = sum(e.cost for tr in traces.values() for e in tr)
+    billed = sum(q.cost for q in res.queries)
+    return abs(traced - billed) / max(abs(billed), 1e-12)
+
+
+def _run_day(n_target: int, seed: int, chaos: bool) -> dict:
+    factor = n_target / SEED_DAY_QUERIES
+    reset_qids()  # replay contract: qids are part of the recorded day
+    qs = generate(horizon_s=DAY_S, seed=seed, patterns=scaled_patterns(factor))
+    t0 = time.perf_counter()
+    res = Simulation(_day_cfg(n_target, seed, chaos)).run(qs)
+    wall = time.perf_counter() - t0
+    s = res.summary()
+    non_terminal = sum(q.state != "done" for q in res.queries)
+    return {
+        "n": s["n"],
+        "wall_s": round(wall, 2),
+        "non_terminal": non_terminal,
+        "violations": s["violations"],
+        "violation_rate": s["violations"] / max(s["n"], 1),
+        "total_cost": round(s["total_cost"], 2),
+        "retries": s["retries"],
+        "conservation_gap": _conservation_gap(res),
+        "event_counts": dict(res.events.counts()) if res.events else {},
+        "feed_fingerprint": res.events.fingerprint() if res.events else None,
+        "result_hash": _result_hash(res),
+    }
+
+
+def run_chaos_section(n_target: int, seed: int, grace: float) -> dict:
+    baseline = _run_day(n_target, seed, chaos=False)
+    a = _run_day(n_target, seed, chaos=True)
+    b = _run_day(n_target, seed, chaos=True)  # the replay
+    deg = a["violation_rate"] - baseline["violation_rate"]
+    section = {
+        "baseline": baseline,
+        "chaos": a,
+        "replay_identical": (
+            a["feed_fingerprint"] == b["feed_fingerprint"]
+            and a["result_hash"] == b["result_hash"]
+        ),
+        "sla_degradation": round(deg, 4),
+        "grace_budget": grace,
+        "gate": {
+            "all_terminal": a["non_terminal"] == 0,
+            "conserving": a["conservation_gap"] < 1e-9,
+            "faults_landed": (
+                a["event_counts"].get("death", 0) > 0
+                and a["event_counts"].get("replace", 0) > 0
+            ),
+            "graceful": deg <= grace,
+        },
+    }
+    section["gate"]["replay_identical"] = section["replay_identical"]
+    section["passed"] = all(section["gate"].values())
+    return section
+
+
+def run_live_smoke(seed: int = 3, n: int = 24) -> dict:
+    """Thread-backed chaos: seeded mid-stage worker kills; the drain
+    must return every query terminal with the plane healing behind it."""
+    from repro.core.chaos import ChaosConfig as CC
+    from repro.core.chaos import install_live_chaos
+    from repro.core.live import LiveConfig, LiveEngine
+    from repro.core.pools import PoolSpec
+    from repro.core.query import Query, QueryWork
+    from repro.core.sla import ServiceLevel
+
+    reset_qids()
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=2),
+               PoolSpec(name="cf", kind="elastic", chips=2, startup_s=0.05,
+                        price_multiplier=10.0)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+        stage_deadline_s=1.0, convergence=True, events=True,
+    ))
+    install_live_chaos(eng, CC(seed=seed, live_death_prob=0.12))
+    t0 = time.perf_counter()
+    queries = []
+    for i in range(n):
+        sla = (ServiceLevel.IMMEDIATE if i % 3 == 0
+               else ServiceLevel.BEST_EFFORT)
+        q = Query(work=QueryWork(arch="paper-default", batch=1), sla=sla,
+                  submit_time=0.0)
+        queries.append(q)
+        eng.submit(q)
+    done = eng.drain(n, timeout=120.0)
+    wall = time.perf_counter() - t0
+    terminal = sum(q.state in ("done", "failed") for q in queries)
+    failed_with_error = all(
+        q.error is not None for q in queries if q.state == "failed"
+    )
+    counts = dict(eng.events.counts()) if eng.events else {}
+    return {
+        "n": n,
+        "wall_s": round(wall, 2),
+        "drained": len(done),
+        "terminal": terminal,
+        "deaths": eng.plane.deaths,
+        "replacements": eng.plane.replacements,
+        "resumes": eng.plane.resumes,
+        "event_counts": counts,
+        "gate": {
+            "all_terminal": terminal == n and len(done) == n,
+            "errors_surfaced": failed_with_error,
+            "chaos_fired": eng.plane.deaths > 0,
+            "healed": eng.plane.replacements > 0,
+        },
+        "passed": (terminal == n and len(done) == n and failed_with_error
+                   and eng.plane.deaths > 0 and eng.plane.replacements > 0),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--factor", type=float, default=5.5,
+                    help="day size multiplier (5.5 ~= the 5k-query day)")
+    ap.add_argument("--fast", action="store_true",
+                    help="1/5th scale smoke run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grace", type=float, default=0.10,
+                    help="max allowed relaxed-violation-rate increase on "
+                    "the chaos day vs the fault-free baseline")
+    ap.add_argument("--live", action="store_true",
+                    help="also run the thread-backed live chaos smoke")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) unless every gate holds")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parents[1] / "BENCH_scale.json"))
+    args = ap.parse_args()
+    factor = args.factor / 5 if args.fast else args.factor
+    n_target = int(SEED_DAY_QUERIES * factor)
+
+    section = run_chaos_section(n_target, args.seed, args.grace)
+    if args.live:
+        section["live"] = run_live_smoke()
+    _write_bench(args.out, {"chaos": section})
+    print(json.dumps({k: v for k, v in section.items()
+                      if k in ("gate", "sla_degradation", "passed")},
+                     indent=2))
+    if args.check:
+        ok = section["passed"] and (
+            section["live"]["passed"] if args.live else True
+        )
+        if not ok:
+            print("FAIL: chaos gate")
+            raise SystemExit(1)
+        print("chaos gate passed: every query terminal, conservation "
+              "holds, the day replays bit-identically, degradation "
+              f"{section['sla_degradation']} <= {args.grace}")
+
+
+if __name__ == "__main__":
+    main()

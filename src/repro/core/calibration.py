@@ -502,10 +502,37 @@ class LiveCalibrator:
                     "log_ratio": lr, "n": 1, "declared": declared,
                 }
                 return
+            alpha = self.alpha
+            if st.get("decayed"):
+                # post-replacement re-learn (``decay``): weight fresh
+                # walls like the running average of a near-empty window
+                # (2/(n+2) is the EWMA whose effective memory is the n
+                # samples seen since the decay), so a replaced worker's
+                # true speed dominates within a handful of stages; the
+                # boost expires once confidence is back at min_samples.
+                alpha = max(alpha, 2.0 / (st["n"] + 2.0))
+                if st["n"] + 1 >= self.min_samples:
+                    st.pop("decayed")
             st["log_ratio"] = (
-                (1.0 - self.alpha) * st["log_ratio"] + self.alpha * lr
+                (1.0 - alpha) * st["log_ratio"] + alpha * lr
             )
             st["n"] += 1
+
+    def decay(self, pool_name: str) -> bool:
+        """Reduce the pool's calibration confidence after a worker
+        replacement (core/convergence.py): the replacement host inherits
+        the pool EWMA as its prior — the fitted speed stays applied, so
+        quotes never snap back to the declared speed — but ``n`` drops
+        to 1, re-arming ``maybe_apply``'s min_samples gate and boosting
+        ``observe``'s effective alpha until the replacement has re-earned
+        the confidence. Returns False when the pool has no state yet."""
+        with self._mu:
+            st = self._state.get(pool_name)
+            if st is None:
+                return False
+            st["n"] = 1
+            st["decayed"] = True
+            return True
 
     def observe_query(self, pool, q) -> None:
         """Convenience: feed every stage of a finished query's trace that

@@ -28,6 +28,7 @@ from typing import Optional
 import numpy as np
 
 from ..perf.hw import V5E, HwSpec
+from .convergence import PoolConverger
 from .cost_model import CostModel, Stage
 from .engine import ClusterExecutor, _Run
 from .query import Query
@@ -138,6 +139,12 @@ class CostEfficientCluster(ClusterExecutor):
         self.alpha = interference_alpha
         self.autoscale = autoscale or AutoscaleConfig()
         self._pending_scale: list[tuple[float, int]] = []  # (effective_at, chips)
+        #: convergence plane (core/convergence.py): policies mutate the
+        #: DESIRED capacity, the converger drives observed toward it —
+        #: scale triggers, cron schedules, and death healing all flow
+        #: through one `evaluate`/`heal` pair
+        self.desired_chips = chips
+        self.converger = PoolConverger()
         self.chip_seconds_provisioned = 0.0  # reserved-capacity accounting
         self._last_prov_t = 0.0
         self.slice_chips = sos_slice_chips
@@ -188,8 +195,10 @@ class CostEfficientCluster(ClusterExecutor):
 
     def _apply_pending_scale(self, now: float) -> bool:
         """Apply due capacity changes BEFORE admission (new capacity can
-        admit this event's waiters); returns True when chips changed."""
-        if not self.autoscale.enabled:
+        admit this event's waiters); returns True when chips changed.
+        Pending entries come from the converger only (autoscale policies
+        or death healing), so no enabled-gate is needed here."""
+        if not self._pending_scale:
             return False
         due = [c for t, c in self._pending_scale if t <= now]
         if not due:
@@ -203,39 +212,17 @@ class CostEfficientCluster(ClusterExecutor):
         return changed
 
     def _schedule_autoscale(self, now: float) -> None:
-        """Evaluate the scale trigger AFTER admission, so `waiting` holds
-        only queries that genuinely found no slice this event — an
+        """Evaluate the scale policies AFTER admission, so `waiting`
+        holds only queries that genuinely found no slice this event — an
         arriving query that a free slice admits immediately must not
-        read as backlog pressure."""
+        read as backlog pressure. The policy pass itself lives on the
+        converger (core/convergence.py): the reactive watermark trigger
+        is its default ``BacklogTriggerPolicy`` with float-identical
+        math, and schedule/hook policies ride the same evaluation."""
         a = self.autoscale
         if not a.enabled:
             return
-        if a.trigger == "backlog":
-            drain = self.drain_time_s(now)
-            # scale out only when queued work exists — a long RUNNING
-            # stage inflates the backlog but new slices can't help it —
-            # and never scale IN over the head of a queue
-            hot = drain >= a.backlog_high_s and bool(self.waiting)
-            cold = drain <= a.backlog_low_s and not self.waiting
-        else:
-            hot = self.run_queue_len >= a.high_watermark
-            cold = self.run_queue_len <= a.low_watermark
-        target = None
-        if hot and self.chips < a.max_chips:
-            target = min(a.max_chips, self.chips + a.step_chips)
-        elif cold and self.chips > a.min_chips:
-            target = max(a.min_chips, self.chips - a.step_chips)
-        if target is not None and not self._pending_scale:
-            delay = (
-                a.scale_delay_s
-                if target > self.chips
-                else (
-                    a.scale_in_delay_s
-                    if a.scale_in_delay_s is not None
-                    else a.scale_delay_s
-                )
-            )
-            self._pending_scale.append((now + delay, target))
+        target = self.converger.evaluate(self, now)
         if a.trigger == "backlog":
             self._as_next_eval = self._next_backlog_eval(now, a, target)
 
@@ -321,35 +308,95 @@ class CostEfficientCluster(ClusterExecutor):
 
     @property
     def needs_tick(self) -> bool:
-        return self.autoscale.enabled
+        return self.autoscale.enabled or self._chaos is not None
+
+    def _chaos_step(self, now: float) -> None:
+        """Apply every due injected worker death (core/chaos.py): close
+        the provisioned-capacity interval, drop the dead chips — never
+        below one admission slice, or a fixed-width waiter could never
+        be admitted again — and let the converger schedule replacement
+        capacity back to ``desired_chips`` through the normal
+        provisioning delay (+ seeded backoff)."""
+        ch = self._chaos
+        while ch.next_death_s() <= now:
+            t_death_s = ch.pop_death()
+            # a POS pool shares all chips (no slice concept): one death
+            # is one chip, floored at 1. An SOS pool loses a slice,
+            # floored at one admission slice — below that a fixed-width
+            # waiter could never be admitted again.
+            unit = self.slice_chips if self.mode == "sos" else 1
+            floor = min(unit, self.chips)
+            loss = ch.death_chips or unit
+            loss = min(loss, self.chips - floor)
+            if loss > 0:
+                self.accrue_provisioned(now)
+                self.chips = self.chips - loss
+                if self.events is not None:
+                    self.events.emit(
+                        "death", now, pool=self.name, chips_lost=loss,
+                        at_s=t_death_s,
+                    )
+                self.converger.heal(self, now)
+        self._chaos_next = ch.next_death_s()
 
     def tick(self, now: float) -> None:
         """Per-event bookkeeping when this pool has no completion due:
-        apply a due capacity change (it may admit waiters — full
-        admission pass), and re-evaluate the backlog autoscale trigger,
-        whose drain-time signal decays continuously between this pool's
-        own events. Run-queue state only changes at own events, so the
+        apply due injected deaths, apply a due capacity change (it may
+        admit waiters — full admission pass), heal death-induced
+        capacity divergence, and re-evaluate the scale policies — the
+        backlog trigger's drain-time signal decays continuously between
+        this pool's own events, and schedule policies fire on their own
+        clock. Run-queue state only changes at own events, so the
         run_queue trigger needs no tick. Amortized O(1): the trigger is
         only re-evaluated once `now` reaches ``_as_next_eval``, the
         pre-computed earliest time the linearly-decaying drain signal
         can change the verdict (any state change recomputes it)."""
-        a = self.autoscale
-        if not a.enabled:
-            return
+        if self._chaos_next <= now:
+            self._chaos_step(now)
         if self._pending_scale:
             if self._pending_scale[0][0] <= now:
                 self._admit(now)
             return
-        if a.trigger == "backlog" and now + 1e-9 >= self._as_next_eval:
+        if self._chaos is not None and self.chips < self.desired_chips:
+            self.converger.heal(self, now)
+        a = self.autoscale
+        if not a.enabled:
+            return
+        if (
+            self.converger.next_fire_s <= now + 1e-9
+            or (a.trigger == "backlog" and now + 1e-9 >= self._as_next_eval)
+        ):
             self._schedule_autoscale(now)
 
     def tick_due(self, now: float) -> bool:
+        if self._chaos_next <= now:
+            return True
+        if self._pending_scale:
+            return self._pending_scale[0][0] <= now
+        if self._chaos is not None and self.chips < self.desired_chips:
+            return True
         a = self.autoscale
         if not a.enabled:
             return False
-        if self._pending_scale:
-            return self._pending_scale[0][0] <= now
+        if self.converger.next_fire_s <= now + 1e-9:
+            return True
         return a.trigger == "backlog" and now + 1e-9 >= self._as_next_eval
+
+    def next_tick_time(self) -> float:
+        """Earliest future time `tick` could act — what the simulator's
+        poll fast-forward skips to (engine.ClusterExecutor returns inf)."""
+        if self._pending_scale:
+            return self._pending_scale[0][0]
+        if self._chaos is not None and self.chips < self.desired_chips:
+            return 0.0  # un-healed death: act at the very next poll
+        t_s = self._chaos_next
+        a = self.autoscale
+        if a.enabled:
+            if self.converger.next_fire_s < t_s:
+                t_s = self.converger.next_fire_s
+            if a.trigger == "backlog" and self._as_next_eval < t_s:
+                t_s = self._as_next_eval
+        return t_s
 
     def quote(self, q: Query, now=None) -> dict:
         exec_s, _, cost = self._static_quote(q)
@@ -406,7 +453,9 @@ class CostEfficientCluster(ClusterExecutor):
         # capacity change, report paths close the tail — no need to
         # accrue on every admission
         scaling = self.autoscale.enabled
-        if scaling and self._pending_scale and self._apply_pending_scale(now):
+        # pending entries exist only when the converger scheduled one
+        # (autoscale target or death healing) — apply either kind
+        if self._pending_scale and self._apply_pending_scale(now):
             self._rates_changed(now)
         if self.mode == "pos":
             admitted = False
@@ -478,6 +527,11 @@ class CostEfficientCluster(ClusterExecutor):
             q.preemptions += 1
             q.state = "preempted"
             self.waiting.append(q)  # resumes at stage_cursor on a free slice
+            if self.events is not None:
+                self.events.emit(
+                    "preempt", now, qid=q.qid, pool=self.name,
+                    cursor=q.stage_cursor,
+                )
             return False
         # coordinator-owned re-placement (spill to an elastic pool)
         return super()._continue_run(run, now)

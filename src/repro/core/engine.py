@@ -283,8 +283,15 @@ class ClusterExecutor:
     pool_kind = "reserved"
     #: whether the simulator must `tick` this pool on events that are
     #: not its own (only pools with time-decaying policy signals —
-    #: backlog-triggered autoscale — need it)
+    #: backlog-triggered autoscale, injected chaos — need it)
     needs_tick = False
+    #: audit event feed (core/events.py), attached by the simulation /
+    #: live engine when event recording is on; None costs nothing
+    events = None
+    #: injected fault schedule (core/chaos.py PoolChaos) and its next
+    #: due death — wired by chaos.wire_sim_chaos on reserved pools
+    _chaos = None
+    _chaos_next = math.inf
 
     def __init__(
         self,
@@ -561,6 +568,12 @@ class ClusterExecutor:
         fast path skips the pool pass when no tick is due anywhere)."""
         return False
 
+    def next_tick_time(self) -> float:
+        """Earliest future time `tick` could act — lets the simulator's
+        poll fast-forward skip straight past an idle pool (inf = this
+        pool never acts between its own events)."""
+        return math.inf
+
     def check_heap_invariant(self) -> None:
         """Test/debug hook: every running stage has exactly one VALID
         heap entry, and no valid entry refers to a retired run."""
@@ -624,9 +637,16 @@ class ClusterExecutor:
         if target.pool_kind == "elastic" and self.pool_kind == "reserved":
             q.spilled = True
             q.state = "spilled"
+            kind = "spill"
         else:
             q.spill_backs += 1
             q.state = "spilled-back"
+            kind = "spill_back"
+        if self.events is not None:
+            self.events.emit(
+                kind, now, qid=q.qid, src=self.name, dst=target.name,
+                cursor=q.stage_cursor,
+            )
         target.submit(q, now)
 
     def withdraw(self, q: Query) -> bool:

@@ -40,8 +40,10 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..models.transformer import LM
 from . import sanitize
+from .convergence import ConvergencePlane
 from .cost_model import CostModel
 from .engine import ClusterExecutor, account_stage
+from .events import EventFeed
 from .pools import (
     PoolSpec,
     build_live_pool,
@@ -297,6 +299,16 @@ class LiveExecutor(ClusterExecutor):
                 del self.running[q.qid]
             self._cv.notify_all()
 
+    def force_release(self, qid: int) -> None:
+        """Unconditionally forget a qid's placement (convergence plane:
+        the owning worker is dead and will never release it). Token-less
+        ON PURPOSE — the caller asserts the placement is lost; if the
+        worker was merely wedged, its stage loop stops at the ownership
+        check and its eventual ``_release`` is a no-op."""
+        with self._cv:
+            self.running.pop(qid, None)
+            self._cv.notify_all()
+
     # --- the stage loop ------------------------------------------------
     def _execute(self, q: Query, token: object) -> None:
         """Run q's remaining stages on this pool. Returns when q
@@ -310,12 +322,18 @@ class LiveExecutor(ClusterExecutor):
             plan = self.cost_model.plan(q.work, chips)
             if q.start_time is None:
                 q.start_time = eng.now()
+            eng._note_beat(q)  # heartbeat BEFORE q is visibly "running"
             q.state = "running"
             q.cluster = self.name
             while q.stage_cursor < len(plan.stages):
                 if eng._stop.is_set():
                     return  # shutdown: abandon between chunks, so a
                     # timed-out drain never waits out a deep backlog
+                with self._mu:
+                    cur = self.running.get(q.qid)
+                if cur is None or cur[1] is not token or q.state == "failed":
+                    return  # reaped / force-released: a resume (or the
+                    # reaper's _fail) owns this query now
                 stage = plan.stages[q.stage_cursor]
                 start = eng.now()
                 self._run_stage_work(lm, q)
@@ -326,6 +344,7 @@ class LiveExecutor(ClusterExecutor):
                     billed_cs=(finish - start) * chips,
                     price_per_chip_s=self.price_per_chip_s,
                 )
+                eng._note_beat(q)  # stage-boundary progress heartbeat
                 with self._mu:  # workers finish stages concurrently
                     self.stages_completed += 1
                 if eng.calibrator is not None:
@@ -488,6 +507,24 @@ class LiveReservedPool(LiveExecutor):
                 w.current_sla is ServiceLevel.IMMEDIATE for w in self.waiting
             )
 
+    def respawn_workers(self) -> int:
+        """Replace dead worker threads (convergence plane — called only
+        from the engine's scheduler thread; ``_threads`` is touched by
+        no other thread after ``start``). Returns the number replaced."""
+        if self.engine._stop.is_set():
+            return 0
+        n = 0
+        for i, t in enumerate(self._threads):
+            if t.is_alive():
+                continue
+            nt = threading.Thread(
+                target=self._worker, name=f"{t.name}r", daemon=True
+            )
+            self._threads[i] = nt
+            nt.start()
+            n += 1
+        return n
+
 
 class LiveElasticPool(LiveExecutor):
     """Burst tier: up to `spec.chips` concurrent tasks, each preceded by
@@ -534,8 +571,13 @@ class LiveElasticPool(LiveExecutor):
 
     def _task(self, q: Query, token: object) -> None:
         try:
-            if self.startup_s and not self.engine._stop.is_set():
-                time.sleep(self.startup_s)
+            if self.startup_s:
+                # interruptible provisioning: Event.wait returns True the
+                # moment shutdown is signalled, so a stopping engine never
+                # serves out queued startup sleeps (shutdown wall was
+                # O(tasks x startup_s) with time.sleep here)
+                if self.engine._stop.wait(self.startup_s):
+                    return
             self._execute(q, token)
         except BaseException as err:  # pragma: no cover — _execute catches
             self.engine._fail(q, err)  # belt-and-braces: never swallow
@@ -585,6 +627,20 @@ class LiveConfig:
     #: on different pools merge into one batched jitted execution
     cross_pool_fusion: bool = False
     fuse_max: int = 8
+    #: a RUNNING query must reach a stage boundary (heartbeat) this
+    #: often or its placement is declared dead — the query is resumed by
+    #: the convergence plane or failed with Query.error set, so a worker
+    #: dying mid-stage can never hang drain(). None disables the reaper.
+    stage_deadline_s: Optional[float] = 60.0
+    #: convergence control plane (core/convergence.py): respawn dead
+    #: reserved workers, decay their pool's calibration confidence, and
+    #: resume lost in-flight queries from their DecodeCheckpoint
+    convergence: bool = False
+    #: checkpoint resumes allowed per query before the reaper fails it
+    max_resumes: int = 1
+    #: audit feed (core/events.py) recording placement / spill / fuse /
+    #: death / replace / resume / drift interventions
+    events: bool = False
 
 
 class LiveEngine:
@@ -598,6 +654,7 @@ class LiveEngine:
         "failed": "_lock",
         "service": "_lock",
         "_ckpt": "_ckpt_mu",
+        "_beats": "_beat_mu",
     }
 
     def __init__(self, cfg: LiveConfig):
@@ -608,6 +665,10 @@ class LiveEngine:
         self._lock = threading.RLock()  # service layer + result sinks
         self._ckpt: dict[int, DecodeCheckpoint] = {}
         self._ckpt_mu = threading.Lock()
+        # qid -> (Query, last stage-boundary time): the reaper's evidence
+        self._beats: dict[int, tuple[Query, float]] = {}
+        self._beat_mu = threading.Lock()
+        self.events = EventFeed() if cfg.events else None
         self._t0 = time.monotonic()
         self._stop = threading.Event()
         specs = cfg.pools
@@ -634,10 +695,16 @@ class LiveEngine:
             fuse_max=cfg.fuse_max,
         )
         self.coordinator.wire_rehoming()
+        self.coordinator.events = self.events
+        for pool in self.pools:
+            pool.events = self.events
         self.service = ServiceLayer(
             self.coordinator, cfg.sla, cfg.sla_enabled,
             fuse=cfg.fuse_queries, fuse_max=cfg.fuse_max,
         )
+        #: live convergence (respawn + calibration decay + checkpoint
+        #: resume) — created before the scheduler thread that steps it
+        self.plane = ConvergencePlane(self) if cfg.convergence else None
         for pool in self.pools:  # consume only once rehoming is wired
             pool.start()
         self._sched_thread = threading.Thread(
@@ -692,26 +759,70 @@ class LiveEngine:
         with self._ckpt_mu:
             self._ckpt.pop(q.qid, None)
 
+    def _has_ckpt(self, qid: int) -> bool:
+        with self._ckpt_mu:
+            return qid in self._ckpt
+
+    # --- stage-boundary heartbeats (the reaper's evidence) -------------
+    def _note_beat(self, q: Query) -> None:
+        t_s = self.now()
+        with self._beat_mu:
+            self._beats[q.qid] = (q, t_s)
+
+    def _clear_beat(self, q: Query) -> None:
+        with self._beat_mu:
+            self._beats.pop(q.qid, None)
+
+    def _reap(self, now_s: float) -> None:
+        """Fail or resume queries whose worker died mid-stage: a RUNNING
+        query must make stage-boundary progress within
+        ``stage_deadline_s`` or its placement is declared dead. Without
+        this, a lost worker left the query in state "running" forever
+        and ``drain()`` sat out its full timeout."""
+        deadline_s = self.cfg.stage_deadline_s
+        if deadline_s is None:
+            return
+        with self._beat_mu:
+            stale = [
+                q for q, t_s in self._beats.values()
+                if q.state == "running" and now_s - t_s > deadline_s
+            ]
+        for q in stale:
+            if self.plane is not None and self.plane.try_resume(q, now_s):
+                continue
+            self._fail(q, TimeoutError(
+                f"stage deadline: no stage-boundary progress in "
+                f"{deadline_s:.1f}s (worker died or wedged)"
+            ))
+
     # --- result sinks (called from worker threads) ---------------------
     def _finish(self, q: Query) -> None:
-        q.finish_time = self.now()
-        q.state = "done"
-        self._drop_ckpt(q)
         # a fused query completes as its members: times shared, billing
         # split by tokens with the exact-sum repair (same helper as the
         # simulator), so drain() counts each submitted query once
         with self._lock:
+            if q.state == "failed":  # the reaper won this race
+                return
+            q.finish_time = self.now()
+            q.state = "done"
             self.done.extend(unpack_fused(q))
+        self._drop_ckpt(q)
+        self._clear_beat(q)
 
     def _fail(self, q: Query, err: BaseException) -> None:
         with self._lock:
-            if q.state == "failed":  # belt-and-braces double report
+            if q.state in ("failed", "done"):  # double report / lost race
                 return
             q.finish_time = self.now()
             q.state = "failed"
             q.error = f"{type(err).__name__}: {err}"
             self.failed.extend(unpack_fused(q))
         self._drop_ckpt(q)
+        self._clear_beat(q)
+        if self.events is not None:
+            self.events.emit(
+                "fail", q.finish_time, qid=q.qid, error=q.error
+            )
 
     # ------------------------------------------------------------------
     def submit(self, q: Query) -> None:
@@ -724,6 +835,11 @@ class LiveEngine:
         while not self._stop.is_set():
             with self._lock:
                 self.service.poll(self.now())
+            now_s = self.now()
+            if self.cfg.stage_deadline_s is not None:
+                self._reap(now_s)
+            if self.plane is not None:
+                self.plane.step_live(now_s)
             time.sleep(self.cfg.sla.poll_period_s)
 
     def drain(self, n_expected: int, timeout: float = 120.0) -> list[Query]:

@@ -9,7 +9,8 @@
     reads (tools/reprolint) — one source of truth for both checks,
   * lock-ORDER asserts: acquisitions that descend the statically derived
     lock hierarchy (``LOCK_RANKS``, from the reprolint RL006 lock graph
-    over live.py/scheduler.py/calibration.py) raise before they can
+    over the threaded core modules, ``lockgraph.LOCK_FILES``) raise
+    before they can
     deadlock; ``tests/test_sanitize.py`` pins the table to the recomputed
     static ranks so the two cannot drift apart,
   * post-run chip-second conservation and gap/overlap-free stage-trace

@@ -374,6 +374,9 @@ class QueryCoordinator:
         #: intervention is counted into the run summary.
         self.drift_reprices = 0
         self.drift_rejects = 0
+        #: audit feed (core/events.py) — attached by the simulator or
+        #: live engine when event recording is on; None costs nothing
+        self.events = None
         self._drift_on = any(
             getattr(p.cost_model.calibration, "drift_bound", None) is not None
             for p in self.pools
@@ -443,7 +446,7 @@ class QueryCoordinator:
                 c *= r
         return c
 
-    def _drift_adjust(self, est: dict, q: Query) -> dict:
+    def _drift_adjust(self, est: dict, q: Query, now: float) -> dict:
         """LATENCY_AWARE view of the drift gate: reprice drifted pools'
         estimates, drop "reject" pools while alternatives remain (a
         rejected pool that is the ONLY option is repriced instead —
@@ -458,10 +461,18 @@ class QueryCoordinator:
             r = self._drift_ratio(p)
             if r is not None:
                 self.drift_reprices += 1
+                if self.events is not None:
+                    self.events.emit(
+                        "drift_reprice", now, qid=q.qid, pool=name, ratio=r,
+                    )
                 e = {"latency_s": e["latency_s"] * r, "cost": e["cost"] * r}
             out[name] = e
         if out:
             self.drift_rejects += len(rejected)
+            if rejected and self.events is not None:
+                self.events.emit(
+                    "drift_reject", now, qid=q.qid, pools=tuple(rejected),
+                )
             return out
         for name in rejected:
             r = self._drift_ratio(self.by_name[name])
@@ -602,7 +613,13 @@ class QueryCoordinator:
                 mates.append(m)
         if not mates:
             return q
-        return fuse_queries([q] + mates, now)
+        merged = fuse_queries([q] + mates, now)
+        if self.events is not None:
+            self.events.emit(
+                "fuse", now, qid=merged.qid,
+                members=tuple(m.qid for m in merged.members),
+            )
+        return merged
 
     def route(self, q: Query, now: float) -> str:
         if (
@@ -633,7 +650,7 @@ class QueryCoordinator:
         if self.policy is Policy.LATENCY_AWARE:
             est = self.estimate(q, now)
             if self._drift_on:
-                est = self._drift_adjust(est, q)
+                est = self._drift_adjust(est, q, now)
             target = q.latency_target_s
             ok = {
                 name: e for name, e in est.items()
@@ -664,6 +681,13 @@ class QueryCoordinator:
                 kept = [p for p in candidates if not self._drift_rejected(p)]
                 if kept and len(kept) != len(candidates):
                     self.drift_rejects += len(candidates) - len(kept)
+                    if self.events is not None:
+                        self.events.emit(
+                            "drift_reject", now, qid=q.qid,
+                            pools=tuple(
+                                p.name for p in candidates if p not in kept
+                            ),
+                        )
                     candidates = kept
             # quote only the candidate tier (a saturated pool's backlog
             # walk is pure waste when it is not a candidate anyway)
@@ -681,6 +705,11 @@ class QueryCoordinator:
                 pool = min(candidates, key=lambda p: p.quote(q, now)["latency_s"])
             else:
                 pool = min(candidates, key=lambda p: p.quote_cost(q))
+        if self.events is not None:
+            self.events.emit(
+                "place", now, qid=q.qid, pool=pool.name,
+                sla=sla.name, cursor=q.stage_cursor,
+            )
         pool.submit(q, now)
         return pool.name
 

@@ -23,8 +23,10 @@ from typing import Iterable, Optional
 import numpy as np
 
 from . import sanitize
+from .chaos import ChaosConfig, wire_sim_chaos
 from .clusters import AutoscaleConfig, FaultModel
 from .engine import StageEvent
+from .events import EventFeed
 from .insights import cluster_shares
 from .pools import PoolSpec, build_pool, default_pool_specs
 from .query import Query
@@ -78,6 +80,17 @@ class SimConfig:
     #: REPRO_SANITIZE=1 environment switch; results are bit-identical
     #: with the sanitizer on or off (CI's sanitize-smoke proves it).
     sanitize: Optional[bool] = None
+    #: fault-injection harness (core/chaos.py): seeded worker deaths,
+    #: provisioning stalls, persistent slow hosts. Implies an event
+    #: feed — the chaos replay gate compares feed fingerprints.
+    chaos: Optional[ChaosConfig] = None
+    #: record every control-plane action into an EventFeed
+    #: (core/events.py), returned on SimResult.events
+    events: bool = False
+    #: extra convergence policies per pool name (core/convergence.py
+    #: SchedulePolicy / HookPolicy), appended after the reactive
+    #: trigger — the pool needs autoscale.enabled for them to tick
+    convergence_policies: Optional[dict] = None
 
 
 @dataclass
@@ -89,6 +102,9 @@ class SimResult:
     #: their drift gate tripped — 0 when no pool armed a drift bound
     drift_reprices: int = 0
     drift_rejects: int = 0
+    #: the run's audit feed (core/events.py) when SimConfig.events or
+    #: chaos was on — replay gate: same cfg+seed => same fingerprint()
+    events: Optional[EventFeed] = None
 
     def by_sla(self) -> dict[str, list[Query]]:
         out: dict[str, list[Query]] = {"imm": [], "rel": [], "boe": []}
@@ -227,6 +243,34 @@ class Simulation:
                     _table.observe_drift(stage.time_s, ev.finish - ev.start)
 
                 pool.stage_observer = _observe_drift
+        # --- convergence / chaos / audit wiring (ROADMAP item 3) ------
+        self.feed: Optional[EventFeed] = None
+        if cfg.events or cfg.chaos is not None:
+            self.feed = EventFeed()
+            for pool in self.pools:
+                pool.events = self.feed
+            self.coordinator.events = self.feed
+        if cfg.convergence_policies:
+            for name, policies in sorted(cfg.convergence_policies.items()):
+                pool = next(
+                    (p for p in self.pools if p.name == name), None
+                )
+                if pool is None:
+                    raise ValueError(
+                        f"convergence_policies names unknown pool {name!r}"
+                    )
+                if not hasattr(pool, "converger"):
+                    raise ValueError(
+                        f"pool {name!r} ({pool.pool_kind}) has no "
+                        "convergence plane — policies drive reserved "
+                        "capacity only"
+                    )
+                for pol in policies:
+                    pool.converger.add_policy(pol)
+        if cfg.chaos is not None:
+            # per-pool seeded death/stall schedules + slow-host faults;
+            # must precede run(): needs_tick is snapshotted there
+            wire_sim_chaos(self.pools, cfg.chaos)
         self.vm = self.coordinator.vm
         self.cf = self.coordinator.cf
         self.service = ServiceLayer(
@@ -256,13 +300,9 @@ class Simulation:
             if t_dl < t_act:
                 t_act = t_dl
         for p in tick_pools:
-            ps = p._pending_scale
-            if ps:
-                t_tick = ps[0][0]
-            elif p.autoscale.trigger == "backlog":
-                t_tick = p._as_next_eval
-            else:
-                t_tick = math.inf  # run_queue: flips at own events only
+            # pending scale / backlog re-eval / scheduled policy firing
+            # / chaos death — the pool knows its own earliest action
+            t_tick = p.next_tick_time()
             if t_tick < t_act:
                 t_act = t_tick
         if t_act is math.inf:
@@ -433,6 +473,42 @@ class Simulation:
                         now, poll_period, stage_wake, arrivals, ai,
                         tick_pools), "poll")
 
+        if cfg.chaos is not None:
+            # convergence epilogue: a death near the end of the day can
+            # leave waiters behind capacity whose replacement lands
+            # after the last heap event — keep ticking (heal, apply
+            # pending scale) and draining until every pool is empty, so
+            # the chaos acceptance bar ("every query terminal") holds.
+            guard = 0
+            while True:
+                nxt = math.inf
+                for pool in pools:
+                    h = pool._heap
+                    while h:
+                        e = h[0]
+                        if e[2].active and e[3] == e[2].epoch:
+                            break
+                        heappop(h)
+                    if h and h[0][0] < nxt:
+                        nxt = h[0][0]
+                    if pool.run_queue_len:
+                        t_tick = pool.next_tick_time()
+                        if t_tick < nxt:
+                            nxt = t_tick
+                if nxt is math.inf:
+                    break
+                now = nxt if nxt > now else now
+                for pool in pools:
+                    if pool.tick_due(now):
+                        pool.tick(now)
+                    finished.extend(pool.advance_to(now))
+                guard += 1
+                if guard > 10_000_000:
+                    raise RuntimeError(
+                        "chaos epilogue made no progress — a pool is "
+                        "wedged below its admission width"
+                    )
+
         # unpack fused queries: members share times; cost splits by
         # tokens with an exact-sum repair (scheduler.unpack_fused)
         expanded: list[Query] = []
@@ -447,6 +523,7 @@ class Simulation:
             expanded, cfg,
             drift_reprices=self.coordinator.drift_reprices,
             drift_rejects=self.coordinator.drift_rejects,
+            events=self.feed,
         )
 
 

@@ -1,0 +1,379 @@
+"""Convergence control plane + fault harness (core/convergence.py,
+core/chaos.py): desired-capacity policies, death healing with seeded
+backoff, the chaos day's terminal/conservation/replay guarantees, and
+the decayed-calibration re-learn after a worker replacement."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultModel,
+    PoolSpec,
+    Query,
+    QueryWork,
+    ServiceLevel,
+    SimConfig,
+    Simulation,
+)
+from repro.core.calibration import LiveCalibrator
+from repro.core.chaos import (
+    ChaosConfig,
+    ChaosFaultModel,
+    LiveChaos,
+    PoolChaos,
+    wire_sim_chaos,
+)
+from repro.core.clusters import AutoscaleConfig
+from repro.core.convergence import (
+    BacklogTriggerPolicy,
+    HookPolicy,
+    SchedulePolicy,
+)
+from repro.core.cost_model import CostModel
+from repro.core.pools import build_pool
+from repro.core.query import reset_qids
+from repro.core.workload import generate, scaled_patterns
+
+
+def _neutral_autoscale(**kw):
+    """Autoscale enabled purely as the policy tick source: the reactive
+    watermarks are unreachable, so only appended policies can act."""
+    kw.setdefault("enabled", True)
+    kw.setdefault("high_watermark", 10**9)
+    kw.setdefault("low_watermark", -1)
+    kw.setdefault("min_chips", 1)
+    kw.setdefault("max_chips", 10**6)
+    return AutoscaleConfig(**kw)
+
+
+def _spec(chips=8, autoscale=None, name="vm"):
+    return PoolSpec(name=name, kind="reserved", chips=chips, mode="sos",
+                    slice_chips=4, autoscale=autoscale)
+
+
+def _chaos_day(seed=7, chaos_seed=11, horizon_s=20_000.0, **chaos_kw):
+    reset_qids()
+    qs = generate(horizon_s=horizon_s, seed=seed,
+                  patterns=scaled_patterns(0.5))
+    cfg = SimConfig(
+        seed=seed, horizon_s=horizon_s,
+        autoscale=AutoscaleConfig(enabled=True),
+        chaos=ChaosConfig(seed=chaos_seed, horizon_s=horizon_s,
+                          **chaos_kw),
+    )
+    return Simulation(cfg).run(qs)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def test_schedule_policy_expands_period_and_fires_latest_due():
+    pol = SchedulePolicy(period_s=100.0, offset_s=50.0, chips=8,
+                        horizon_s=350.0)
+    assert pol.entries == [(50.0, 8), (150.0, 8), (250.0, 8), (350.0, 8)]
+    assert pol.next_fire_s(0.0) == 50.0
+    assert pol.desired(None, 40.0) is None  # nothing due yet
+    # two firings elapsed at once: consumed in order, latest wins
+    pol2 = SchedulePolicy(entries=[(10.0, 4), (20.0, 16)])
+    assert pol2.desired(None, 25.0) == 16
+    assert pol2.next_fire_s(25.0) == math.inf
+    assert pol2.desired(None, 30.0) is None  # one-shot: never re-fires
+
+
+def test_schedule_policy_rejects_bad_args():
+    with pytest.raises(ValueError):
+        SchedulePolicy()
+    with pytest.raises(ValueError):
+        SchedulePolicy(period_s=0.0, chips=4)
+
+
+def test_schedule_policy_scales_pool_in_simulation():
+    reset_qids()
+    qs = generate(horizon_s=3600.0, seed=0, patterns=scaled_patterns(0.2))
+    cfg = SimConfig(
+        seed=0, horizon_s=3600.0, events=True,
+        pools=[_spec(chips=8, autoscale=_neutral_autoscale(
+            scale_delay_s=60.0)),
+            PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0)],
+        convergence_policies={"vm": [
+            SchedulePolicy(entries=[(600.0, 16), (1800.0, 8)]),
+        ]},
+    )
+    res = Simulation(cfg).run(qs)
+    scales = [r for r in res.events.rows() if r[1] == "scale"]
+    assert [(dict(r[3])["pool"], dict(r[3])["to_chips"]) for r in scales] \
+        == [("vm", 16), ("vm", 8)]  # (pool, to_chips) in firing order
+    # the change lands after the provisioning delay
+    assert scales[0][2] >= 600.0
+    assert dict(scales[0][3])["at_s"] >= scales[0][2] + 60.0 - 1e-9
+    assert all(q.state == "done" for q in res.queries)
+
+
+def test_hook_policy_overrides_reactive_trigger():
+    reset_qids()
+    qs = generate(horizon_s=1800.0, seed=1, patterns=scaled_patterns(0.2))
+    cfg = SimConfig(
+        seed=1, horizon_s=1800.0, events=True,
+        pools=[_spec(chips=8, autoscale=_neutral_autoscale(
+            scale_delay_s=30.0)),
+            PoolSpec(name="cf", kind="elastic", chips=64, startup_s=2.0)],
+        convergence_policies={"vm": [
+            HookPolicy(lambda pool, now: 12 if now >= 900.0 else None),
+        ]},
+    )
+    res = Simulation(cfg).run(qs)
+    scales = [r for r in res.events.rows() if r[1] == "scale"]
+    assert scales and dict(scales[0][3])["to_chips"] == 12
+
+
+def test_unknown_or_elastic_pool_in_policies_raises():
+    cfg = SimConfig(pools=[_spec(), PoolSpec(name="cf", kind="elastic",
+                                             chips=8, startup_s=1.0)],
+                    convergence_policies={"nope": [BacklogTriggerPolicy()]})
+    with pytest.raises(ValueError, match="unknown pool"):
+        Simulation(cfg)
+    cfg2 = SimConfig(pools=[_spec(), PoolSpec(name="cf", kind="elastic",
+                                              chips=8, startup_s=1.0)],
+                     convergence_policies={"cf": [BacklogTriggerPolicy()]})
+    with pytest.raises(ValueError, match="no convergence plane"):
+        Simulation(cfg2)
+
+
+def test_legacy_autoscale_day_unchanged_by_converger_refactor():
+    """The watermark policy now lives on PoolConverger; an enabled-
+    autoscale day must be byte-identical to the same day with the
+    policy evaluated per tick (regression: the refactor may not change
+    a single float)."""
+    def day(events):
+        reset_qids()
+        qs = generate(horizon_s=7200.0, seed=5, patterns=scaled_patterns(0.5))
+        cfg = SimConfig(seed=5, horizon_s=7200.0, events=events,
+                        autoscale=AutoscaleConfig(enabled=True))
+        return Simulation(cfg).run(qs)
+
+    a, b = day(events=False), day(events=True)
+    sig = lambda res: sorted(  # noqa: E731
+        (q.qid, q.finish_time, q.cost, q.chip_seconds, q.cluster)
+        for q in res.queries
+    )
+    assert sig(a) == sig(b)  # the feed is an observer, never an actor
+    assert a.events is None and b.events is not None
+
+
+# ---------------------------------------------------------------------------
+# seeded chaos determinism
+# ---------------------------------------------------------------------------
+
+def test_pool_chaos_schedules_are_seeded_and_name_stable():
+    cfg = ChaosConfig(seed=3, n_deaths=5, stall_prob=0.5, horizon_s=1000.0)
+    a, b = PoolChaos(cfg, "vm"), PoolChaos(cfg, "vm")
+    assert a.death_times_s == b.death_times_s
+    assert a.death_times_s == sorted(a.death_times_s)
+    assert [a.draw_provision_failures() for _ in range(20)] == \
+           [b.draw_provision_failures() for _ in range(20)]
+    other = PoolChaos(cfg, "spot")
+    assert other.death_times_s != a.death_times_s
+    # exponential backoff, capped
+    assert a.backoff_s(0) == cfg.backoff_base_s
+    assert a.backoff_s(1) == 2 * cfg.backoff_base_s
+    assert a.backoff_s(99) == cfg.backoff_cap_s
+
+
+def test_pool_chaos_death_cursor_exhausts_to_inf():
+    ch = PoolChaos(ChaosConfig(seed=0, n_deaths=2, horizon_s=10.0), "vm")
+    assert ch.next_death_s() == ch.death_times_s[0]
+    ch.pop_death()
+    ch.pop_death()
+    assert ch.next_death_s() == math.inf
+
+
+def test_provision_failures_respect_max_stalls():
+    ch = PoolChaos(ChaosConfig(seed=1, stall_prob=1.0, max_stalls=3), "vm")
+    assert all(ch.draw_provision_failures() == 3 for _ in range(5))
+
+
+def test_slow_host_fault_scales_wall_and_bill_together():
+    """Slow hosts stretch wall time and billed chip-seconds by the same
+    factor — conservation (billed == wall * chips) holds by
+    construction."""
+    fm = ChaosFaultModel(slow_hosts=frozenset({1}), slow_factor=3.0,
+                         n_hosts=4)
+    rng = np.random.default_rng(0)
+    q_slow = Query(work=QueryWork(), sla=ServiceLevel.RELAXED,
+                   submit_time=0.0)
+    q_slow.qid = 5  # 5 % 4 == 1: slow slot
+    t, billed, retries = fm.stage_execution(2.0, 4, rng, q_slow)
+    assert (t, billed, retries) == (6.0, 24.0, 0)
+    q_fast = Query(work=QueryWork(), sla=ServiceLevel.RELAXED,
+                   submit_time=0.0)
+    q_fast.qid = 4  # 4 % 4 == 0: clean slot
+    t, billed, _ = fm.stage_execution(2.0, 4, rng, q_fast)
+    assert (t, billed) == (2.0, 8.0)
+
+
+def test_live_chaos_kill_is_seeded_and_fires_once_per_site():
+    a = LiveChaos(ChaosConfig(seed=9, live_death_prob=0.5))
+    b = LiveChaos(ChaosConfig(seed=9, live_death_prob=0.5))
+    verdicts_a = [a.should_kill(q, s) for q in range(20) for s in range(3)]
+    first_b = [b.should_kill(q, s) for q in range(20) for s in range(3)]
+    assert verdicts_a == first_b  # same seed, same kills
+    assert any(verdicts_a)
+    # a site never re-fires: the resumed stage survives
+    again = [a.should_kill(q, s) for q in range(20) for s in range(3)]
+    assert not any(again)
+    assert not LiveChaos(ChaosConfig(seed=9)).should_kill(0, 0)  # p=0
+
+
+# ---------------------------------------------------------------------------
+# the chaos day: terminal, conserving, replayable
+# ---------------------------------------------------------------------------
+
+def test_chaos_day_every_query_terminal_and_conserving(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    from repro.core import sanitize
+    monkeypatch.setattr(sanitize, "_ENABLED", True)
+    res = _chaos_day(n_deaths=8, stall_prob=0.4, slow_host_frac=0.25,
+                     slow_factor=1.5)
+    assert res.queries and all(q.state == "done" for q in res.queries)
+    counts = res.events.counts()
+    assert counts.get("death", 0) > 0
+    assert counts.get("replace", 0) > 0
+    assert counts.get("provision_retry", 0) > 0
+    # billing conservation over the whole fault-injected day
+    traces = {id(q.stage_trace): q.stage_trace
+              for q in res.queries if q.stage_trace}
+    assert sum(q.cost for q in res.queries) == pytest.approx(
+        sum(e.cost for tr in traces.values() for e in tr), rel=1e-9
+    )
+
+
+def test_chaos_day_replays_bit_identical():
+    a = _chaos_day(n_deaths=6, stall_prob=0.3)
+    b = _chaos_day(n_deaths=6, stall_prob=0.3)
+    assert a.events.fingerprint() == b.events.fingerprint()
+    assert sorted((q.qid, q.finish_time, q.cost) for q in a.queries) == \
+           sorted((q.qid, q.finish_time, q.cost) for q in b.queries)
+    # a different chaos seed is a DIFFERENT day
+    c = _chaos_day(chaos_seed=12, n_deaths=6, stall_prob=0.3)
+    assert c.events.fingerprint() != a.events.fingerprint()
+
+
+def test_chaos_death_capacity_heals_back_to_desired():
+    res = _chaos_day(n_deaths=5)
+    deaths = [r for r in res.events.rows() if r[1] == "death"]
+    replaces = [r for r in res.events.rows() if r[1] == "replace"]
+    assert deaths, "no deaths landed despite n_deaths=5"
+    # every death eventually schedules replacement capacity
+    assert replaces
+    for r in replaces:
+        payload = dict(r[3])
+        assert payload["to_chips"] > payload["from_chips"]
+
+
+def test_wire_sim_chaos_targets_reserved_pools_only():
+    vm = build_pool(_spec(chips=8), use_calibration=False)
+    cf = build_pool(PoolSpec(name="cf", kind="elastic", chips=8,
+                             startup_s=1.0), use_calibration=False)
+    wire_sim_chaos([vm, cf], ChaosConfig(seed=0, n_deaths=3,
+                                         slow_host_frac=0.5,
+                                         slow_factor=2.0))
+    assert vm._chaos is not None and vm._chaos.death_times_s
+    assert getattr(cf, "_chaos", None) is None
+    # slow hosts are a fleet property: both pools get the wrapper
+    assert isinstance(vm.fault, ChaosFaultModel)
+    assert isinstance(cf.fault, ChaosFaultModel)
+    # death_pools narrows deaths but keeps stalls everywhere
+    vm2 = build_pool(_spec(chips=8), use_calibration=False)
+    spot = build_pool(_spec(chips=8, name="spot"), use_calibration=False)
+    wire_sim_chaos([vm2, spot], ChaosConfig(
+        seed=0, n_deaths=3, stall_prob=0.5, death_pools=("spot",)))
+    assert vm2._chaos.death_times_s == []
+    assert spot._chaos.death_times_s
+    assert vm2._chaos.stall_prob == 0.5
+
+
+def test_chaos_preserves_base_fault_model_fields():
+    vm = build_pool(_spec(chips=8), use_calibration=False)
+    vm.fault = FaultModel(failure_prob=0.25, straggler_prob=0.5,
+                          straggler_scale=2.0)
+    wire_sim_chaos([vm], ChaosConfig(seed=0, slow_host_frac=0.5,
+                                     slow_factor=2.0))
+    assert vm.fault.failure_prob == 0.25
+    assert vm.fault.straggler_prob == 0.5
+    assert vm.fault.straggler_scale == 2.0
+    assert vm.fault.slow_factor == 2.0
+
+
+# ---------------------------------------------------------------------------
+# decayed calibration: the replacement re-learns in a few stages
+# ---------------------------------------------------------------------------
+
+def _mis_declared_pool(declared=2.0):
+    return build_pool(
+        PoolSpec(name="vm", kind="reserved", chips=64, mode="sos",
+                 slice_chips=16, speed_factor=declared),
+        use_calibration=False,
+    )
+
+
+def _feed_walls(cal, pool, w, truth_speed, n):
+    truth = CostModel(use_calibration=False, speed_factor=truth_speed)
+    stages = truth.plan(w, 16).stages
+    for k in range(n):
+        s = stages[k % len(stages)]
+        cal.observe(pool, w, k % len(stages), 16, s.time_s)
+
+
+def test_decay_relearns_replacement_speed_within_five_stages():
+    """After a worker replacement the pool EWMA is decayed: the next 5
+    measured walls dominate the estimate, so the fitted speed lands
+    within ~10% of the replacement's truth — against ~40% error for an
+    undecayed EWMA at the same alpha."""
+    w = QueryWork(arch="paper-default", prompt_tokens=200_000,
+                  output_tokens=64)
+    decayed_pool = _mis_declared_pool(declared=2.0)
+    control_pool = _mis_declared_pool(declared=2.0)
+    decayed = LiveCalibrator(alpha=0.25, min_samples=6)
+    control = LiveCalibrator(alpha=0.25, min_samples=6)
+    for cal, pool in ((decayed, decayed_pool), (control, control_pool)):
+        _feed_walls(cal, pool, w, truth_speed=1.0, n=6)
+        assert cal.maybe_apply(pool)
+        assert pool.cost_model.effective_speed_factor == pytest.approx(1.0)
+    # the dead worker's replacement actually runs at 4x declared basis
+    assert decayed.decay("vm")
+    target = math.log(0.5)  # measured/predicted vs declared=2, truth=4
+    _feed_walls(decayed, decayed_pool, w, truth_speed=4.0, n=5)
+    _feed_walls(control, control_pool, w, truth_speed=4.0, n=5)
+    err = lambda cal: abs(math.log(cal.ratio("vm")) - target)  # noqa: E731
+    assert err(decayed) < 0.1
+    assert err(control) > 0.3
+    assert err(decayed) < err(control) / 4
+    # confidence re-earned: the sixth wall re-arms the hot swap and the
+    # fitted speed tracks the replacement
+    _feed_walls(decayed, decayed_pool, w, truth_speed=4.0, n=1)
+    assert decayed.maybe_apply(decayed_pool)
+    assert decayed_pool.cost_model.effective_speed_factor == pytest.approx(
+        4.0, rel=0.1
+    )
+
+
+def test_decay_without_state_is_a_noop():
+    cal = LiveCalibrator(alpha=0.25, min_samples=2)
+    assert not cal.decay("vm")
+
+
+def test_decay_does_not_perturb_legacy_observe_path():
+    """States that never decayed must update with the plain alpha —
+    decay support cannot change a single float for engines that never
+    replace a worker."""
+    w = QueryWork(arch="paper-default", prompt_tokens=200_000,
+                  output_tokens=64)
+    pool_a = _mis_declared_pool()
+    pool_b = _mis_declared_pool()
+    a = LiveCalibrator(alpha=0.25, min_samples=3)
+    b = LiveCalibrator(alpha=0.25, min_samples=3)
+    _feed_walls(a, pool_a, w, truth_speed=1.0, n=7)
+    _feed_walls(b, pool_b, w, truth_speed=1.0, n=7)
+    assert a.ratio("vm") == b.ratio("vm")

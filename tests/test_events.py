@@ -1,0 +1,100 @@
+"""Audit event feed (core/events.py): append-only capped ring,
+deterministic canonical encoding, and the replay fingerprint the chaos
+gate compares (benchmarks/chaos.py)."""
+import json
+import threading
+
+from repro.core.events import DEFAULT_CAP, EventFeed, row_json
+
+
+def test_emit_assigns_sequential_seqs_and_keeps_payload_sorted():
+    feed = EventFeed()
+    feed.emit("place", 1.0, qid=3, pool="vm")
+    feed.emit("scale", 2.0, pool="vm", to_chips=8, from_chips=4)
+    rows = feed.rows()
+    assert [r[0] for r in rows] == [0, 1]
+    assert rows[0][1] == "place" and rows[0][2] == 1.0
+    # payload items are sorted at emit time — encoding order can never
+    # depend on keyword order at the call site
+    assert rows[1][3] == (
+        ("from_chips", 4), ("pool", "vm"), ("to_chips", 8)
+    )
+    assert len(feed) == 2 and feed.total == 2 and feed.dropped == 0
+
+
+def test_cap_drops_oldest_and_counts_dropped():
+    feed = EventFeed(cap=3)
+    for i in range(10):
+        feed.emit("e", float(i), i=i)
+    assert len(feed) == 3
+    assert feed.total == 10
+    assert feed.dropped == 7
+    assert [r[0] for r in feed.rows()] == [7, 8, 9]
+    assert feed.tail(2) == feed.rows()[-2:]
+
+
+def test_default_cap_bounds_memory():
+    assert EventFeed().cap == DEFAULT_CAP
+
+
+def test_counts_by_kind():
+    feed = EventFeed()
+    for _ in range(3):
+        feed.emit("place", 0.0, qid=0)
+    feed.emit("death", 1.0, pool="vm")
+    assert dict(feed.counts()) == {"place": 3, "death": 1}
+
+
+def test_row_json_is_canonical_and_parseable():
+    feed = EventFeed()
+    feed.emit("fuse", 2.5, qid=7, members=(1, 2, 3))
+    s = row_json(feed.rows()[0])
+    assert " " not in s  # compact separators: stable fingerprint input
+    seq, kind, t_s, items = json.loads(s)
+    assert (seq, kind, t_s) == (0, "fuse", 2.5)
+    assert items == [["members", [1, 2, 3]], ["qid", 7]]
+
+
+def test_fingerprint_deterministic_and_sensitive():
+    def build(n, salt=0):
+        feed = EventFeed()
+        for i in range(n):
+            feed.emit("e", float(i), i=i + salt)
+        return feed
+
+    assert build(50).fingerprint() == build(50).fingerprint()
+    assert build(50).fingerprint() != build(51).fingerprint()
+    assert build(50).fingerprint() != build(50, salt=1).fingerprint()
+
+
+def test_fingerprint_covers_dropped_prefix_via_total():
+    """Two feeds with identical surviving rows but different histories
+    must not collide: the fingerprint binds the total emit count."""
+    a = EventFeed(cap=2)
+    for i in range(5):
+        a.emit("e", float(i), i=i)
+    b = EventFeed(cap=2)
+    for i in range(3, 5):
+        b.emit("e", float(i), i=i)
+    # surviving rows carry different seqs AND totals differ — either
+    # alone breaks the collision
+    assert a.fingerprint() != b.fingerprint()
+
+
+def test_concurrent_emits_never_lose_or_duplicate_seqs():
+    feed = EventFeed()
+    n_threads, per = 8, 500
+
+    def emitter(k):
+        for i in range(per):
+            feed.emit("e", 0.0, worker=k, i=i)
+
+    threads = [threading.Thread(target=emitter, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    rows = feed.rows()
+    assert feed.total == n_threads * per
+    assert sorted(r[0] for r in rows) == list(range(n_threads * per))

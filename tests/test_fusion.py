@@ -363,3 +363,67 @@ def test_fifo_drained_pools_leave_no_lane_entries():
     for i in range(2000):
         cf.submit(_q(t=float(i), sla=ServiceLevel.RELAXED), float(i))
     assert sum(len(lane) for lane in cf.waiting._lanes) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: faults inside a cross-pool fused group
+# ---------------------------------------------------------------------------
+
+class _FailSecondStage(FaultModel):
+    """Deterministic fault: the second stage executed on this pool fails
+    once and is re-run (wall and bill double for that stage only)."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def stage_execution(self, base, chips, rng, q):
+        self.calls += 1
+        if self.calls == 2:
+            q.retries += 1
+            return 2.0 * base, 2.0 * base * chips, 1
+        return base, base * chips, 0
+
+
+def test_fused_group_fault_rebills_one_stage_and_splits_exactly():
+    """A stage failure inside a cross-pool fused batch re-runs — and
+    re-bills — only the failed stage, and the inflated total still
+    splits across members with the 1-ulp exact-sum guarantee."""
+    def run(fault):
+        coord, a, b = _two_pool_coordinator()
+        if fault is not None:
+            b.fault = fault
+        a.submit(_q(prompt=900_000), 0.0)  # saturate a: waiters queue
+        w1, w2 = _q(t=1.0), _q(t=2.0)
+        a.submit(w1, 1.0)
+        a.submit(w2, 2.0)
+        fresh = _q(t=3.0)
+        assert coord.route(fresh, 3.0) == "b"
+        merged = [r.query for r in b.running if r.query.members is not None]
+        assert len(merged) == 1
+        b.advance_to(1e9)
+        return merged[0]
+
+    fm = _FailSecondStage()
+    faulty = run(fm)
+    control = run(None)
+    assert faulty.state == "done" and control.state == "done"
+    assert fm.calls == len(faulty.stage_trace)
+    # exactly one stage carries the retry, and only it re-billed
+    hit = [e for e in faulty.stage_trace if e.retries == 1]
+    assert len(hit) == 1 and hit[0].index == 1
+    assert sum(e.retries for e in faulty.stage_trace) == 1
+    for e, c in zip(faulty.stage_trace, control.stage_trace):
+        if e.retries:
+            assert e.finish - e.start == pytest.approx(2.0 * (c.finish - c.start))
+            assert e.chip_seconds == pytest.approx(2.0 * c.chip_seconds)
+        else:
+            assert e.finish - e.start == pytest.approx(c.finish - c.start)
+            assert e.chip_seconds == pytest.approx(c.chip_seconds)
+    assert faulty.retries == 1
+    # the inflated bill still splits bit-exactly across the members
+    members = unpack_fused(faulty)
+    assert len(members) == 3
+    assert sum(m.cost for m in members) == faulty.cost
+    assert sum(m.chip_seconds for m in members) == faulty.chip_seconds
+    assert all(m.state == "done" for m in members)
+    assert faulty.cost > control.cost  # the re-run was billed, once

@@ -13,7 +13,7 @@ from pathlib import Path
 
 import pytest
 
-from repro.core.live import LiveConfig, LiveEngine
+from repro.core.live import LiveConfig, LiveEngine, LiveExecutor
 from repro.core.pools import PoolSpec
 from repro.core.query import Query, QueryWork
 from repro.core.sla import Policy, ServiceLevel, SLAConfig
@@ -535,3 +535,157 @@ def test_live_fused_execution_unpacks_with_exact_split():
         assert all(q.fused_with == 3 for q in out)
     finally:
         eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# satellite: worker death between checkpoints never hangs the drain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_worker_death_mid_stage_fails_query_instead_of_hanging():
+    """A worker thread dying between checkpoints (BaseException escapes
+    the stage loop) leaves the query permanently 'running' in the old
+    engine — drain() hung. The stage-boundary reaper must fail it with
+    Query.error set and return the drain promptly."""
+    from repro.core.chaos import WorkerDeath
+
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=1)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+        stage_deadline_s=0.5,  # convergence OFF: the reaper acts alone
+    ))
+    try:
+        pool = eng.pools[0]
+
+        def dying(lm, q):
+            raise WorkerDeath("injected: thread death between checkpoints")
+
+        pool._run_stage_work = dying
+        q = _q(ServiceLevel.IMMEDIATE)
+        t0 = time.monotonic()
+        eng.submit(q)
+        done = eng.drain(1, timeout=60.0)
+        took = time.monotonic() - t0
+        assert q in done
+        assert q.state == "failed"
+        assert q.error is not None and "stage deadline" in q.error
+        assert q.finish_time is not None
+        assert took < 15.0, f"drain waited {took:.1f}s on a dead worker"
+    finally:
+        eng.shutdown()
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_convergence_plane_respawns_worker_and_resumes_from_checkpoint():
+    """With the convergence plane ON the same death is healed: the dead
+    worker is respawned, the in-flight query resumes from its decode
+    checkpoint on the replacement, and every stage is billed exactly
+    once (the lost stage re-runs; completed stages never re-bill)."""
+    from repro.core.chaos import WorkerDeath
+
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=1)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+        stage_deadline_s=0.5, convergence=True, events=True,
+    ))
+    try:
+        pool = eng.pools[0]
+        real = pool._run_stage_work
+        fired = []
+
+        def die_once(lm, q):
+            # kill the worker on the first decode stage: the prefill
+            # checkpoint exists, so the plane can resume past it
+            if q.stage_cursor == 1 and not fired:
+                fired.append(q.qid)
+                raise WorkerDeath("injected: mid-decode death")
+            return real(lm, q)
+
+        pool._run_stage_work = die_once
+        q = _q(ServiceLevel.IMMEDIATE)
+        eng.submit(q)
+        done = eng.drain(1, timeout=60.0)
+        assert q in done
+        assert q.state == "done", q.error
+        assert fired == [q.qid]
+        _assert_conserved(q, len(q.stage_trace))
+        assert q.stage_trace[0].stage == "prefill"
+        assert eng.plane.deaths == 1
+        assert eng.plane.resumes == 1
+        assert eng.plane.replacements >= 1
+        # the dead thread's slot holds a respawned replacement (name
+        # gains the 'r' suffix): the pool returned to full width and
+        # the replacement is what ran the query to completion
+        assert [t.name for t in pool._threads] == ["live-vm-0r"]
+        counts = dict(eng.events.counts())
+        assert counts["death"] == 1 and counts["resume"] == 1
+        assert counts.get("replace", 0) >= 1
+    finally:
+        eng.shutdown()
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_max_resumes_bounds_repeated_deaths():
+    """A query whose placement dies on every attempt must converge to a
+    terminal failure after max_resumes, not loop forever."""
+    from repro.core.chaos import WorkerDeath
+
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="vm", kind="reserved", chips=1)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+        stage_deadline_s=0.5, convergence=True, max_resumes=1,
+    ))
+    try:
+        pool = eng.pools[0]
+
+        def always_die(lm, q):
+            if q.stage_cursor == 1:
+                raise WorkerDeath("injected: persistent decode death")
+            return LiveExecutor._run_stage_work(pool, lm, q)
+
+        pool._run_stage_work = always_die
+        q = _q(ServiceLevel.IMMEDIATE)
+        eng.submit(q)
+        done = eng.drain(1, timeout=60.0)
+        assert q in done
+        assert q.state == "failed"
+        assert "stage deadline" in q.error
+        assert eng.plane.resumes == 1  # resumed once, then failed
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# satellite: elastic provisioning sleep is interruptible
+# ---------------------------------------------------------------------------
+
+def test_elastic_startup_sleep_does_not_block_shutdown():
+    """LiveElasticPool used to time.sleep(startup_s) per task — a
+    shutdown during provisioning waited out the full startup. The sleep
+    is now the engine's stop event, so shutdown wall stays far below
+    startup_s."""
+    startup_s = 30.0
+    eng = LiveEngine(LiveConfig(
+        pools=[PoolSpec(name="cf", kind="elastic", chips=2,
+                        startup_s=startup_s, price_multiplier=10.0)],
+        sla=SLAConfig(relaxed_deadline_s=10.0, poll_period_s=0.02,
+                      vm_overload_threshold=1_000),
+    ))
+    for _ in range(3):
+        eng.submit(_q(ServiceLevel.IMMEDIATE))
+    # wait until at least one task is inside the provisioning sleep
+    pool = eng.pools[0]
+    assert _wait_until(lambda: pool.run_queue_len > 0, timeout=10.0)
+    t0 = time.monotonic()
+    eng.shutdown()
+    took = time.monotonic() - t0
+    assert took < startup_s / 3, (
+        f"shutdown took {took:.1f}s — the provisioning sleep is not "
+        f"interruptible"
+    )

@@ -33,6 +33,9 @@ LOCK_FILES = (
     "src/repro/core/live.py",
     "src/repro/core/scheduler.py",
     "src/repro/core/calibration.py",
+    "src/repro/core/convergence.py",
+    "src/repro/core/events.py",
+    "src/repro/core/chaos.py",
 )
 
 _LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore",
